@@ -1,0 +1,74 @@
+"""Kernel benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container the interesting column is max|Δ| (correctness);
+wall times are reported for completeness but reflect the interpreter, not
+TPU Mosaic codegen.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import flash_attention, ssd_intra
+from repro.kernels.ref import attention_ref, ssd_intra_ref
+
+
+def bench(fn, *args, n=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main(csv: bool = True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    for (B, S, Hq, Hkv, hd) in [(1, 256, 8, 2, 64), (2, 512, 4, 1, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, Hq, hd))
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+        t_k, out = bench(lambda *a: flash_attention(*a, causal=True), q, k, v)
+        t_r, ref = bench(lambda *a: attention_ref(*a, causal=True), q, k, v)
+        rows.append({"kernel": "flash_attention",
+                     "shape": f"B{B}S{S}H{Hq}/{Hkv}d{hd}",
+                     "pallas_ms": round(t_k * 1e3, 2),
+                     "ref_ms": round(t_r * 1e3, 2),
+                     "max_abs_err": float(np.abs(np.asarray(out)
+                                                 - np.asarray(ref)).max())})
+
+    for (B, nc, Q, H, P, N) in [(1, 4, 64, 4, 32, 32), (2, 8, 32, 8, 16, 16)]:
+        ks = jax.random.split(key, 5)
+        xr = jax.random.normal(ks[0], (B, nc, Q, H, P))
+        dtr = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+        ltT = -jnp.abs(jax.random.normal(ks[2], (B, nc, H, Q))) * 0.1
+        Br = jax.random.normal(ks[3], (B, nc, Q, N))
+        Cr = jax.random.normal(ks[4], (B, nc, Q, N))
+        t_k, out = bench(ssd_intra, xr, dtr, ltT, Br, Cr)
+        t_r, ref = bench(ssd_intra_ref, xr, dtr, ltT, Br, Cr)
+        rows.append({"kernel": "ssd_intra",
+                     "shape": f"B{B}c{nc}Q{Q}H{H}P{P}N{N}",
+                     "pallas_ms": round(t_k * 1e3, 2),
+                     "ref_ms": round(t_r * 1e3, 2),
+                     "max_abs_err": float(np.abs(np.asarray(out)
+                                                 - np.asarray(ref)).max())})
+
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

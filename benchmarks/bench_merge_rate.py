@@ -1,0 +1,36 @@
+"""Merge-rate table — the paper's Table 1 analogue.
+
+Computes p for each single-study search space and pairwise/k-wise q for
+the multi-study spaces.  Pure control-plane arithmetic (no simulation).
+"""
+
+from __future__ import annotations
+
+from benchmarks.spaces import (STUDIES, resnet20_space_high_merge,
+                               resnet20_space_low_merge)
+from repro.core import k_wise_merge_rate, merge_rate
+
+
+def main(csv: bool = True):
+    rows = []
+    for name, spec in STUDIES.items():
+        trials = spec["space"]().trials(spec["max_steps"])
+        rows.append({"space": name, "n_trials": len(trials),
+                     "metric": "p", "value": round(merge_rate(trials), 3)})
+    for label, fn in (("resnet20-high", resnet20_space_high_merge),
+                      ("resnet20-low", resnet20_space_low_merge)):
+        for S in (2, 4, 8):
+            sets = [fn(seed=i).trials(160) for i in range(S)]
+            rows.append({"space": label, "n_trials": sum(map(len, sets)),
+                         "metric": f"q{S}",
+                         "value": round(k_wise_merge_rate(sets), 3)})
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

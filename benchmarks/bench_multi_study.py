@@ -1,0 +1,64 @@
+"""Multi-study benchmark — the paper's Figures 13/14 (§6.2).
+
+S ∈ {1, 2, 4, 8} studies over the same (model, dataset, hp-set) submitted
+concurrently; studies share one search plan, so inter-study redundancy is
+eliminated.  Two space families: high merge (Figure 13) and low merge
+(Figure 14).  Reports k-wise merge rate q and trial/stage savings.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List
+
+from benchmarks.spaces import (resnet20_space_high_merge,
+                               resnet20_space_low_merge)
+from repro.core import SearchPlanDB, Study, k_wise_merge_rate, run_studies
+from repro.core.trainer import SimulatedTrainer
+from repro.core.tuners import GridTuner
+
+N_WORKERS = 40
+MAX_STEPS = 160
+SEC_PER_STEP = 60.0
+
+
+def run_multi(space_fn: Callable, n_studies: int, share: bool):
+    db = SearchPlanDB()
+    pairs = []
+    for i in range(n_studies):
+        st = Study.create(db, "resnet20", "cifar10", ("lr", "bs"))
+        pairs.append((st, GridTuner(space_fn(seed=i).trials(MAX_STEPS))))
+    backend = SimulatedTrainer(base_seconds_per_step=SEC_PER_STEP,
+                               horizon=MAX_STEPS, load_seconds=30.0,
+                               save_seconds=30.0, eval_seconds=60.0)
+    return run_studies(pairs, backend, n_workers=N_WORKERS, share=share)
+
+
+def main(csv: bool = True):
+    rows = []
+    for label, space_fn in (("high-merge", resnet20_space_high_merge),
+                            ("low-merge", resnet20_space_low_merge)):
+        for S in (1, 2, 4, 8):
+            trial_sets: List = [space_fn(seed=i).trials(MAX_STEPS)
+                                for i in range(S)]
+            q = k_wise_merge_rate(trial_sets)
+            t = run_multi(space_fn, S, share=False)
+            s = run_multi(space_fn, S, share=True)
+            rows.append({
+                "space": label, "S": S,
+                "n_trials": sum(len(x) for x in trial_sets),
+                "q": round(q, 3),
+                "gpuh_trial": round(t.gpu_hours, 1),
+                "gpuh_stage": round(s.gpu_hours, 1),
+                "gpuh_saving": round(t.gpu_seconds / s.gpu_seconds, 2),
+                "e2e_saving": round(t.end_to_end / s.end_to_end, 2),
+            })
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Single-study benchmark — the paper's Figure 12 / Table 5.
+
+Runs each of the four studies under (a) trial-based execution (the
+Ray Tune / Hippo-trial baseline: identical engine, merging disabled) and
+(b) Hippo's stage-based execution, on a simulated 40-GPU cluster, and
+reports GPU-hours, end-to-end time, and the savings ratios next to the
+study's merge rate p.
+
+Paper expectations validated here (EXPERIMENTS.md §Claims):
+* grid-search GPU-hour saving ≈ p;
+* SHA/ASHA savings exceed p (early-stopping concentrates the explored
+  sub-space on high-merge prefixes);
+* end-to-end ≤ GPU-hour saving (bounded by cluster parallelism).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from benchmarks.spaces import STUDIES
+from repro.core import SearchPlanDB, Study, merge_rate
+from repro.core.trainer import SimulatedTrainer
+from repro.core.tuners import ASHATuner, GridTuner, SHATuner
+
+N_WORKERS = 40                      # the paper's 40-GPU cluster
+SEC_PER_STEP = 60.0                 # 1 epoch ≈ 1 virtual minute
+
+
+def make_tuner(spec: Dict):
+    trials = spec["space"]().trials(spec["max_steps"])
+    if spec["algo"] == "grid":
+        return GridTuner(trials)
+    if spec["algo"] == "sha":
+        return SHATuner(trials, min_steps=spec["min_steps"],
+                        max_steps=spec["max_steps"], eta=spec["eta"])
+    if spec["algo"] == "asha":
+        return ASHATuner(trials, min_steps=spec["min_steps"],
+                         max_steps=spec["max_steps"], eta=spec["eta"])
+    raise ValueError(spec["algo"])
+
+
+def run_study(name: str, spec: Dict, share: bool):
+    db = SearchPlanDB()
+    study = Study.create(db, name, "cifar10", ("lr", "bs"))
+    backend = SimulatedTrainer(base_seconds_per_step=SEC_PER_STEP
+                               / spec.get("gpus", 1),
+                               horizon=spec["max_steps"],
+                               lr0=spec.get("lr0", 0.1),
+                               load_seconds=10.0, save_seconds=10.0,
+                               eval_seconds=30.0)
+    tuner = make_tuner(spec)
+    stats = study.run(tuner, backend,
+                      n_workers=spec.get("workers", N_WORKERS),
+                      gpus_per_worker=spec.get("gpus", 1), share=share)
+    best = getattr(tuner, "best_score", None)
+    if best is None or best == -math.inf:
+        best = float("nan")
+    return stats, best
+
+
+def main(csv: bool = True):
+    rows = []
+    for name, spec in STUDIES.items():
+        trials = spec["space"]().trials(spec["max_steps"])
+        p = merge_rate(trials)
+        trial_stats, trial_best = run_study(name, spec, share=False)
+        stage_stats, stage_best = run_study(name, spec, share=True)
+        rows.append({
+            "study": name, "n_trials": len(trials), "p": round(p, 3),
+            "gpuh_trial": round(trial_stats.gpu_hours, 2),
+            "gpuh_stage": round(stage_stats.gpu_hours, 2),
+            "gpuh_saving": round(trial_stats.gpu_seconds
+                                 / stage_stats.gpu_seconds, 2),
+            "e2e_trial_h": round(trial_stats.end_to_end / 3600, 2),
+            "e2e_stage_h": round(stage_stats.end_to_end / 3600, 2),
+            "e2e_saving": round(trial_stats.end_to_end
+                                / stage_stats.end_to_end, 2),
+            "best_trial": round(trial_best, 4),
+            "best_stage": round(stage_best, 4),
+        })
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

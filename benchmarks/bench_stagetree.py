@@ -1,0 +1,61 @@
+"""Control-plane microbenchmarks: plan insertion, Algorithm 1, scheduling.
+
+The paper's system must regenerate a stage tree from the search plan on
+*every* scheduling round (stateless scheduler, §4.3) — this measures that
+path at realistic study sizes (hundreds of trials).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.spaces import resnet56_space
+from repro.core import CriticalPathScheduler, SearchPlan, build_stage_tree
+
+
+def timeit(fn, n=5):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main(csv: bool = True):
+    trials = resnet56_space().trials(120)
+    rows = []
+
+    def insert_all():
+        plan = SearchPlan()
+        for t in trials:
+            plan.submit(t)
+        return plan
+
+    dt, plan = timeit(insert_all)
+    rows.append({"op": "plan_insert", "n": len(trials),
+                 "us_per_op": round(dt / len(trials) * 1e6, 1)})
+
+    dt, tree = timeit(lambda: build_stage_tree(plan))
+    rows.append({"op": "build_stage_tree", "n": len(tree),
+                 "us_per_op": round(dt / max(1, len(tree)) * 1e6, 1)})
+
+    sched = CriticalPathScheduler()
+    dt, paths = timeit(lambda: sched.assign(plan, build_stage_tree(plan), 40))
+    rows.append({"op": "schedule_40_workers", "n": len(paths),
+                 "us_per_op": round(dt * 1e6 / max(1, len(paths)), 1)})
+
+    dt, _ = timeit(lambda: SearchPlan.from_json(plan.to_json()))
+    rows.append({"op": "plan_json_roundtrip", "n": len(plan.nodes),
+                 "us_per_op": round(dt / len(plan.nodes) * 1e6, 1)})
+
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` runs everything and prints CSV
+blocks; individual benches are importable modules with ``main()``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_merge_rate,
+                            bench_multi_study, bench_single_study,
+                            bench_stagetree)
+
+    sections = [
+        ("merge-rate table (paper Table 1)", bench_merge_rate),
+        ("control-plane microbench (§4.3 stateless scheduler)",
+         bench_stagetree),
+        ("kernel allclose + timing", bench_kernels),
+        ("single-study: trial vs stage (Figure 12 / Table 5)",
+         bench_single_study),
+        ("multi-study S1/S2/S4/S8 (Figures 13-14)", bench_multi_study),
+    ]
+    for title, mod in sections:
+        print(f"\n## {title}")
+        sys.stdout.flush()
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Multi-study merging (§6.2): 4 studies share one search plan.
+
+Four teams submit near-identical ResNet20 studies; Hippo dedups across
+them.  Compare against the same four studies run trial-based.
+
+    PYTHONPATH=src python examples/multi_study.py
+"""
+
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.spaces import resnet20_space_high_merge
+from repro.core import SearchPlanDB, Study, k_wise_merge_rate, run_studies
+from repro.core.trainer import SimulatedTrainer
+from repro.core.tuners import GridTuner
+
+S, STEPS = 4, 160
+
+
+def run(share: bool):
+    db = SearchPlanDB()
+    pairs = []
+    for i in range(S):
+        st = Study.create(db, "resnet20", "cifar10", ("lr", "bs"))
+        pairs.append((st, GridTuner(
+            resnet20_space_high_merge(seed=i).trials(STEPS))))
+    backend = SimulatedTrainer(base_seconds_per_step=60, horizon=STEPS)
+    return run_studies(pairs, backend, n_workers=40, share=share)
+
+
+def main():
+    sets = [resnet20_space_high_merge(seed=i).trials(STEPS) for i in range(S)]
+    print(f"{S} studies, {sum(map(len, sets))} trials total, "
+          f"k-wise merge rate q = {k_wise_merge_rate(sets):.2f}")
+    trial = run(share=False)
+    stage = run(share=True)
+    print(f"trial-based: {trial.gpu_hours:8.1f} GPU-h   "
+          f"e2e {trial.end_to_end/3600:6.2f} h")
+    print(f"stage-based: {stage.gpu_hours:8.1f} GPU-h   "
+          f"e2e {stage.end_to_end/3600:6.2f} h")
+    print(f"savings: {trial.gpu_seconds/stage.gpu_seconds:.2f}x GPU-hours, "
+          f"{trial.end_to_end/stage.end_to_end:.2f}x end-to-end")
+
+
+if __name__ == "__main__":
+    main()

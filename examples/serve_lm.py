@@ -1,0 +1,69 @@
+"""Serve a small LM with batched requests (decode path demo).
+
+Loads a reduced qwen2-0.5b-family model, prefills a batch of prompts and
+serves new tokens with the ring-buffer KV cache — the same ``serve_step``
+the multi-pod dry-run lowers for ``decode_32k`` / ``long_500k``.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-2.7b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import LM
+from repro.train.step import build_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(d_model=256)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.arch_type}); batch={args.batch}")
+
+    # ---- prefill: feed the prompts token-by-token through the cache
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    cache = model.init_cache(args.batch,
+                             args.prompt_len + args.new_tokens + 8)
+    serve = jax.jit(build_serve_step(model))
+
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for i in range(args.prompt_len):
+        tok = prompts[:, i:i + 1]
+        next_tok, cache = serve(params, cache, tok, jnp.int32(i))
+    print(f"prefilled {args.prompt_len} positions in {time.time()-t0:.2f}s")
+
+    # ---- decode: batched generation
+    t0 = time.time()
+    out = []
+    tok = next_tok[:, None]
+    for i in range(args.new_tokens):
+        next_tok, cache = serve(params, cache, tok,
+                                jnp.int32(args.prompt_len + i))
+        tok = next_tok[:, None]
+        out.append(next_tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"generated {args.new_tokens} tokens/request in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s batched)")
+    print("sampled continuations (greedy):")
+    for b in range(args.batch):
+        print(f"  req{b}: {list(map(int, gen[b][:10]))} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs  / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes  / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s ICI per link)
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-device*
+flops/bytes, so we scale by ``chips`` to get the global numerators (the
+division then cancels — the terms are effectively per-device time, which
+is what a roofline wants).  Collective bytes are not in cost_analysis:
+we scan the partitioned HLO and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Also reported: MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the ratio
+MODEL_FLOPS / HLO_FLOPs — how much of compiled compute is "useful"
+(catches remat/redundancy waste).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "HW"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 per chip (TPU v5e class)
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "link_bw": 50e9,          # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPES_PAT = "|".join(_DTYPE_BYTES)
+# instruction definition: %name = dtype[dims]... op-name(...operands...)
+_DEF_RE = re.compile(
+    r"%([\w.\-]+)\s*=\s*(?:\()?(" + _DTYPES_PAT + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*[^=]*?\s(" +
+    "|".join(c.replace("-", r"\-") for c in _COLLECTIVES) +
+    r")(-start|-done)?\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Per-device bytes of every collective in the partitioned HLO.
+
+    Operand types are not printed inline in post-compile HLO, so we build a
+    symbol table (instruction name → result bytes) first, then resolve each
+    collective's operands.  The per-op transfer estimate is
+    ``max(Σ operand bytes, result bytes)`` — an all-gather's traffic is its
+    (large) result, a reduce-scatter's its (large) input; the max covers
+    both directions of the ring.
+    """
+    sizes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo):
+        sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # counted at -start
+        name_m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)", line)
+        result_b = sizes.get(name_m.group(1), 0) if name_m else 0
+        call = line[m.end():]
+        # strip attribute tail (operands come before the first '), ' attr)
+        call = call.split("), ")[0]
+        operand_b = sum(sizes.get(nm, 0) for nm in _OPERAND_RE.findall(call))
+        out[kind] += max(operand_b, result_b)
+        counts[kind] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def roofline_terms(record: Dict[str, Any], chips: int) -> Dict[str, Any]:
+    """Derive the three terms (seconds) from a dry-run record."""
+    cost = record.get("cost", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll = record.get("collectives", {})
+    coll_dev = coll.get("total", 0.0)
+
+    t_compute = flops_dev / HW["peak_flops"]
+    t_memory = bytes_dev / HW["hbm_bw"]
+    t_coll = coll_dev / HW["link_bw"]
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+
+    out = dict(terms)
+    out["dominant"] = dominant.replace("_s", "")
+    out["hlo_flops_per_device"] = flops_dev
+    out["hlo_bytes_per_device"] = bytes_dev
+    out["collective_bytes_per_device"] = coll_dev
+    out["hlo_flops_global"] = flops_dev * chips
+    out["bound_step_s"] = total
+    return out
+
+
+def model_flops(record: Dict[str, Any], tokens: int, kind: str) -> float:
+    """6·N·D rule (N = active params, D = tokens); forward-only passes
+    (prefill/decode) use 2·N·D."""
+    n = record.get("active_params") or record.get("params") or 0
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,15 @@
+"""Hippo's core: hp sequences, search plans, stage trees, scheduler, engine."""
+
+from repro.core.hpseq import (
+    Constant, Cosine, CosineWarmRestarts, Cyclic, Exponential, HpConfig,
+    Linear, MultiStep, Piecewise, Seq, StepLR, Warmup,
+)
+from repro.core.trial import Trial
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import build_stage_tree
+from repro.core.scheduler import CriticalPathScheduler
+from repro.core.engine import ExecutionEngine, Tuner
+from repro.core.trainer import SimulatedTrainer, StageContext, TrainerBackend
+from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps
+from repro.core.db import SearchPlanDB, study_key
+from repro.core.study import Study, run_studies

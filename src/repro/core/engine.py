@@ -1,0 +1,325 @@
+"""Discrete-event execution engine — Hippo's scheduler/worker/aggregator loop.
+
+This is the system of §4 run as a deterministic discrete-event simulation
+over ``n_workers`` virtual workers (a *worker* is one GPU server slot in
+the paper; one mesh slice in the TPU mapping).  The engine drives the real
+components:
+
+* the **search plan** is the single source of truth (stateless scheduling),
+* every scheduling round regenerates a **stage tree** (Algorithm 1) and the
+  **critical-path scheduler** extracts whole chains for idle workers,
+* chains execute through a :class:`~repro.core.trainer.TrainerBackend` —
+  either real JAX training (wall-clock measured) or the analytic simulator
+  (virtual durations) — and deposit checkpoints/metrics through the
+  **aggregator** at their virtual completion times,
+* **tuners** observe metrics and submit/kill trials, closing the HPO loop.
+
+Accounting matches the paper's two measurements: ``gpu_seconds`` (sum of
+busy time × GPUs per worker) and ``end-to-end`` time (virtual clock at
+completion).
+
+``share=False`` turns the engine into the **trial-based baseline**
+(Ray Tune / "Hippo-trial"): every submitted trial is salted so its plan
+nodes never merge with other trials' — identical scheduling machinery,
+zero cross-trial reuse.  A trial still reuses *its own* checkpoints when a
+tuner promotes it to a longer step budget, exactly like a paused/resumed
+Ray Tune trial.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time as _time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core.hpseq import HpConfig
+from repro.core.scheduler import CriticalPathScheduler
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import Stage, build_stage_tree
+from repro.core.trainer import StageContext, TrainerBackend
+from repro.core.trial import Trial
+from repro.train.checkpoint import CheckpointStore
+
+__all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats"]
+
+
+class Tuner:
+    """Base class for HPO algorithms (client-library tuners, §5.2)."""
+
+    objective: str = "val_acc"
+    mode: str = "max"  # or "min"
+
+    def start(self, handle: "StudyHandle") -> None:
+        raise NotImplementedError
+
+    def on_result(self, trial: Trial, step: int, metrics: Dict[str, float]) -> None:
+        pass
+
+    def is_done(self) -> bool:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- helpers
+    def score(self, metrics: Dict[str, float]) -> float:
+        v = metrics[self.objective]
+        return v if self.mode == "max" else -v
+
+
+@dataclass
+class StudyHandle:
+    """The submission interface a tuner sees (the client library's view)."""
+
+    engine: "ExecutionEngine"
+    tuner: Tuner
+    study_id: str = "study-0"
+
+    def submit(self, trial: Trial, upto: Optional[int] = None) -> None:
+        self.engine._submit(self, trial, upto)
+
+    def kill(self, trial: Trial) -> None:
+        self.engine._kill(self, trial)
+
+
+@dataclass
+class EngineStats:
+    gpu_seconds: float = 0.0
+    end_to_end: float = 0.0
+    stages_run: int = 0
+    steps_run: int = 0
+    evals_run: int = 0
+    ckpt_loads: int = 0
+    ckpt_saves: int = 0
+    rounds: int = 0
+
+    @property
+    def gpu_hours(self) -> float:
+        return self.gpu_seconds / 3600.0
+
+
+@dataclass
+class _Worker:
+    wid: int
+    busy_until: float = 0.0
+    idle: bool = True
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False)
+
+
+class ExecutionEngine:
+    def __init__(self, plan: SearchPlan, backend: TrainerBackend,
+                 n_workers: int = 4, gpus_per_worker: int = 1,
+                 scheduler: Optional[CriticalPathScheduler] = None,
+                 store: Optional[CheckpointStore] = None,
+                 share: bool = True,
+                 max_steps_per_chain: Optional[int] = None):
+        self.plan = plan
+        self.backend = backend
+        self.workers = [_Worker(i) for i in range(n_workers)]
+        self.gpus_per_worker = gpus_per_worker
+        self.scheduler = scheduler or CriticalPathScheduler()
+        self.store = store or CheckpointStore()
+        self.share = share
+        self.max_steps_per_chain = max_steps_per_chain
+        self.time = 0.0
+        self.stats = EngineStats()
+        self._events: List[_Event] = []
+        self._seq = itertools.count()
+        # (node_id, step) -> list of (handle, trial) waiting on the result
+        self._waiters: Dict[Tuple[str, int], List[Tuple[StudyHandle, Trial]]] = {}
+        self._trials: Dict[str, Trial] = {}
+        self._killed: Set[str] = set()
+        self._handles: List[StudyHandle] = []
+
+    # ------------------------------------------------------------------ API
+    def handle(self, tuner: Tuner, study_id: str = None) -> StudyHandle:
+        h = StudyHandle(self, tuner, study_id or f"study-{len(self._handles)}")
+        self._handles.append(h)
+        return h
+
+    def run(self, tuners: List[Tuner]) -> EngineStats:
+        """Run tuners to completion; returns accounting stats."""
+        handles = [self.handle(t) for t in tuners]
+        for h in handles:
+            h.tuner.start(h)
+        self._drain()
+        not_done = [h.tuner for h in handles if not h.tuner.is_done()]
+        if not_done:
+            raise RuntimeError(
+                f"engine drained but {len(not_done)} tuner(s) not done — "
+                "a tuner is waiting on a request that was never submitted")
+        self.stats.end_to_end = self.time
+        return self.stats
+
+    # ------------------------------------------------------------- internal
+    def _push(self, t: float, kind: str, payload: Any) -> None:
+        heapq.heappush(self._events, _Event(t, next(self._seq), kind, payload))
+
+    def _salted(self, trial: Trial, study_id: str) -> Trial:
+        """Trial-based baseline: make the plan treat every (study, trial)
+        pair as unshareable — the salt must include the study id, or two
+        identical studies would still dedup across each other."""
+        if self.share:
+            return trial
+        cfg = trial.hp_config
+        static = dict(cfg.static)
+        static["_trial_salt"] = f"{study_id}/{trial.trial_id}"
+        return Trial(HpConfig(dict(cfg.fns), static), trial.total_steps,
+                     trial_id=trial.trial_id, meta=dict(trial.meta))
+
+    def _submit(self, handle: StudyHandle, trial: Trial,
+                upto: Optional[int]) -> None:
+        trial = self._salted(trial, handle.study_id)
+        self._trials[trial.trial_id] = trial
+        node, step, satisfied = self.plan.submit(trial, upto)
+        if satisfied:
+            # §3.2: results already present → respond immediately (still an
+            # event so tuner callbacks observe a consistent clock).
+            metrics = self.plan.metrics_for(node.node_id, step)
+            self._push(self.time, "reply", (handle, trial, step, metrics))
+            return
+        self._waiters.setdefault((node.node_id, step), []).append((handle, trial))
+
+    def _kill(self, handle: StudyHandle, trial: Trial) -> None:
+        tid = trial.trial_id
+        if tid in self._killed:
+            return
+        self._killed.add(tid)
+        path = list(self.plan.trial_paths.get(tid, []))
+        self.plan.release_trial(tid)
+        # drop this trial's pending requests nobody else wants
+        for nid in path:
+            node = self.plan.nodes[nid]
+            for s in sorted(node.requests):
+                key = (nid, s)
+                ws = self._waiters.get(key)
+                if ws:
+                    ws[:] = [(h, t) for (h, t) in ws if t.trial_id != tid]
+                if not ws and s not in node.running and s not in node.metrics:
+                    node.requests.discard(s)
+                    self._waiters.pop(key, None)
+
+    # ------------------------------------------------------------ main loop
+    def _drain(self) -> None:
+        self._assign()
+        while self._events:
+            ev = heapq.heappop(self._events)
+            assert ev.time >= self.time - 1e-9
+            self.time = max(self.time, ev.time)
+            if ev.kind == "stage":
+                self._on_stage_done(ev.payload)
+            elif ev.kind == "reply":
+                handle, trial, step, metrics = ev.payload
+                handle.tuner.on_result(trial, step, metrics)
+            elif ev.kind == "idle":
+                self.workers[ev.payload].idle = True
+            self._assign()
+
+    # ------------------------------------------------------------ scheduling
+    def _assign(self) -> None:
+        idle = [w for w in self.workers if w.idle]
+        if not idle:
+            return
+        tree = build_stage_tree(self.plan)
+        if not tree.stages:
+            return
+        self.stats.rounds += 1
+        paths = self.scheduler.assign(self.plan, tree, len(idle))
+        # stage_id -> (state, finish_time) for cross-chain chaining this round
+        produced: Dict[str, Tuple[Any, float]] = {}
+        for path, worker in zip(paths, idle):
+            if self.max_steps_per_chain:
+                path = self._truncate(path)
+            self._execute_chain(path, worker, produced)
+
+    def _truncate(self, path: List[Stage]) -> List[Stage]:
+        out, steps = [], 0
+        for st in path:
+            out.append(st)
+            steps += st.steps
+            if steps >= self.max_steps_per_chain:
+                break
+        return out
+
+    def _execute_chain(self, path: List[Stage], worker: _Worker,
+                       produced: Dict[str, Tuple[Any, float]]) -> None:
+        head = path[0]
+        t = max(self.time, worker.busy_until)
+        load_s, save_s = self.backend.overheads()
+
+        # ------- input state
+        if head.resume is not None:
+            nid, step = head.resume
+            cid = self.plan.node(nid).ckpts[step]
+            state = self.store.get(cid)
+            t += load_s
+            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.ckpt_loads += 1
+        elif head.parent is not None:
+            if head.parent not in produced:
+                # parent chain was truncated before producing our input —
+                # leave the requests pending; a later round reschedules them
+                worker.idle = True
+                return
+            # produced by another chain in this same round
+            state, parent_done = produced[head.parent]
+            t = max(t, parent_done) + load_s
+            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.ckpt_loads += 1
+        else:
+            state = self.backend.init_state()
+
+        worker.idle = False
+        for st in path:
+            node = self.plan.node(st.node_id)
+            ctx = StageContext(
+                node_id=st.node_id, desc=node.desc, node_start=node.start,
+                start=st.start, stop=st.stop,
+                path_key=self.plan.path_key(st.node_id))
+            node.running.add(st.stop)
+
+            wall0 = _time.perf_counter()
+            if st.steps > 0:
+                state = self.backend.run_stage(state, ctx)
+            metrics = self.backend.evaluate(state, ctx) if st.report else None
+            wall = _time.perf_counter() - wall0
+
+            sim = self.backend.stage_seconds(ctx)
+            dur = sim if sim is not None else wall
+            if st.report:
+                dur += getattr(self.backend, "eval_seconds", 0.0)
+                self.stats.evals_run += 1
+            dur += save_s  # checkpoint at every stage boundary
+            self.stats.ckpt_saves += 1
+            t += dur
+            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.stages_run += 1
+            self.stats.steps_run += st.steps
+
+            if st.steps > 0:
+                self.plan.record_profile(
+                    st.node_id, (sim if sim is not None else wall) / st.steps)
+            cid = self.store.put(ctx.path_key, st.stop, state)
+            produced[st.stage_id] = (state, t)
+            self._push(t, "stage", {
+                "node_id": st.node_id, "stop": st.stop, "cid": cid,
+                "metrics": metrics, "worker": worker.wid,
+                "last": st is path[-1]})
+        worker.busy_until = t
+
+    # ----------------------------------------------------------- aggregation
+    def _on_stage_done(self, p: Dict[str, Any]) -> None:
+        self.plan.record_result(p["node_id"], p["stop"], p["cid"], p["metrics"])
+        if p["metrics"] is not None:
+            key = (p["node_id"], p["stop"])
+            for handle, trial in self._waiters.pop(key, []):
+                if trial.trial_id not in self._killed:
+                    handle.tuner.on_result(trial, p["stop"], p["metrics"])
+        if p["last"]:
+            self._push(self.time, "idle", p["worker"])

@@ -1,0 +1,110 @@
+"""Stateless critical-path scheduler (Hippo §4.3).
+
+The scheduler receives a transient stage tree, estimates each stage's
+execution time as ``steps × profiled seconds-per-step`` (profile stored in
+the search plan, §4.3), and repeatedly extracts the *critical path* — the
+root-to-leaf path with the longest remaining estimated time — assigning the
+whole path to one idle worker.  Scheduling whole paths ("batch of stages")
+instead of single stages avoids checkpoint save/load transitions and
+prioritizes end-to-end completion time.
+
+The scheduler keeps **no execution state**: callers re-generate a fresh
+stage tree from the search plan every scheduling round, and stages already
+covered by running work simply never appear in the new tree (they are
+deferred by Algorithm 1's running check).
+
+Beyond-paper option: ``weighted=True`` weights each path by the number of
+pending report-leaves it unblocks, divided by its length — shared prefixes
+with high fan-out get scheduled first, improving end-to-end time at equal
+GPU-hours (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import Stage, StageTree
+
+__all__ = ["CriticalPathScheduler"]
+
+
+class CriticalPathScheduler:
+    def __init__(self, weighted: bool = False):
+        self.weighted = weighted
+
+    # ------------------------------------------------------------- estimates
+    def stage_time(self, plan: SearchPlan, stage: Stage) -> float:
+        return stage.steps * plan.profile_of(stage.node_id)
+
+    # ------------------------------------------------------------ scheduling
+    def next_path(self, plan: SearchPlan, tree: StageTree,
+                  taken: set) -> Optional[List[Stage]]:
+        """The highest-priority maximal chain of unscheduled stages.
+
+        A chain starts at a stage whose parent is either absent or already
+        taken, and extends through the child subtree maximizing remaining
+        time (critical path).  Returns None when every stage is taken.
+        """
+        # remaining[s] = est time of the heaviest downward path from s
+        remaining: Dict[str, float] = {}
+        fanout: Dict[str, int] = {}
+
+        def walk(sid: str) -> float:
+            st = tree.stages[sid]
+            best_child = 0.0
+            fo = 1 if st.report else 0
+            for c in st.children:
+                best_child = max(best_child, walk(c))
+                fo += fanout[c]
+            t = (0.0 if sid in taken else self.stage_time(plan, st)) + best_child
+            remaining[sid] = t
+            fanout[sid] = fo
+            return t
+
+        for r in tree.roots:
+            walk(r)
+
+        # candidate chain heads: unscheduled stages whose parent is taken/None
+        heads = [
+            s for s in tree.stages.values()
+            if s.stage_id not in taken
+            and (s.parent is None or s.parent in taken)
+        ]
+        if not heads:
+            return None
+
+        def priority(s: Stage) -> float:
+            t = remaining[s.stage_id]
+            if self.weighted:
+                return fanout[s.stage_id] / max(t, 1e-9)
+            return t
+
+        head = max(heads, key=priority)
+
+        # extend the chain downward along the heaviest child
+        path, cur = [], head
+        while True:
+            path.append(cur)
+            taken.add(cur.stage_id)
+            nxt = None
+            for c in cur.children:
+                if c in taken:
+                    continue
+                if nxt is None or remaining[c] > remaining[nxt.stage_id]:
+                    nxt = tree.stages[c]
+            if nxt is None:
+                return path
+            cur = nxt
+
+    def assign(self, plan: SearchPlan, tree: StageTree,
+               n_paths: int) -> List[List[Stage]]:
+        """Extract up to ``n_paths`` disjoint chains for idle workers."""
+        taken: set = set()
+        out = []
+        for _ in range(n_paths):
+            p = self.next_path(plan, tree, taken)
+            if p is None:
+                break
+            out.append(p)
+        return out

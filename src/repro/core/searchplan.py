@@ -1,0 +1,282 @@
+"""Search plan — Hippo's persistent study representation (§3.2, Figure 6).
+
+The search plan is a tree of *plan nodes*.  Each node represents "a
+hyper-parameter configuration starting from a certain training step": the
+node's ``desc`` is the offset-normalized functional-piece descriptor (one
+piece per hyper-parameter) and ``start`` is the global step at which the
+configuration takes over (= the integer annotation on the edge from its
+parent).  Node identity is therefore ``(parent, start, desc)`` — two trials
+whose hyper-parameter values coincide on ``[0, s)`` traverse exactly the
+same nodes up to step ``s``, which is what makes prefix sharing automatic.
+
+Nodes are **never removed** when new trials arrive (§3.2): a trial that
+needs a shorter stage than previously materialized simply adds another
+integer to an existing node's ``requests`` field.  Stage trees are
+generated transiently from the plan (see :mod:`repro.core.stagetree`).
+
+Per-node fields mirror Figure 6:
+
+* ``desc``      — canonical hp-piece descriptors (hp_config of the node),
+* ``ckpts``     — {global step: checkpoint key} trained under this path,
+* ``metrics``   — {global step: metrics dict},
+* ``requests``  — set of global steps requested (train + report metrics),
+* ``running``   — subset of requests currently executing on a worker,
+* ``refcount`` / ``trials`` — bookkeeping for GC and multi-study sharing,
+* ``profile``   — measured seconds/step under this configuration (used by
+  the critical-path scheduler).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.core.trial import Trial
+from repro.utils import stable_hash
+
+__all__ = ["PlanNode", "SearchPlan", "Request"]
+
+ROOT = "ROOT"  # virtual root id; real roots are children of this sentinel.
+
+
+@dataclass
+class PlanNode:
+    node_id: str
+    parent: Optional[str]           # parent node id (ROOT children have parent=None)
+    start: int                      # global step where this config takes over
+    desc: Dict[str, Any]            # canonical piece descriptor
+    ckpts: Dict[int, str] = field(default_factory=dict)
+    metrics: Dict[int, Dict[str, float]] = field(default_factory=dict)
+    requests: Set[int] = field(default_factory=set)
+    running: Set[int] = field(default_factory=set)
+    refcount: int = 0
+    trials: Set[str] = field(default_factory=set)
+    profile: Optional[float] = None  # seconds / step (None = unprofiled)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def desc_hash(self) -> str:
+        return stable_hash(self.desc)
+
+    def latest_ckpt_at_or_before(self, step: int) -> Optional[int]:
+        """Largest checkpointed step s with node.start <= s <= step."""
+        cands = [s for s in self.ckpts if self.start <= s <= step]
+        return max(cands) if cands else None
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "node_id": self.node_id, "parent": self.parent, "start": self.start,
+            "desc": self.desc,
+            "ckpts": {str(k): v for k, v in self.ckpts.items()},
+            "metrics": {str(k): v for k, v in self.metrics.items()},
+            "requests": sorted(self.requests),
+            "refcount": self.refcount,
+            "trials": sorted(self.trials),
+            "profile": self.profile,
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "PlanNode":
+        return cls(
+            node_id=d["node_id"], parent=d["parent"], start=d["start"],
+            desc=d["desc"],
+            ckpts={int(k): v for k, v in d["ckpts"].items()},
+            metrics={int(k): v for k, v in d["metrics"].items()},
+            requests=set(d["requests"]),
+            refcount=d.get("refcount", 0),
+            trials=set(d.get("trials", [])),
+            profile=d.get("profile"),
+            meta=d.get("meta") or {},
+        )
+
+
+@dataclass(frozen=True)
+class Request:
+    """A pending unit of work: train the path of ``node`` up to ``step``."""
+
+    node_id: str
+    step: int
+
+
+class SearchPlan:
+    """The search-plan database entry for one (model, dataset, hp-set) key.
+
+    Multiple studies over the same key share one SearchPlan — that is the
+    entire multi-study merging mechanism (§2.2 "sharing computations across
+    studies"): their trials land in the same node tree.
+    """
+
+    def __init__(self, key: str = "default"):
+        self.key = key
+        self.nodes: Dict[str, PlanNode] = {}
+        self.children: Dict[Optional[str], List[str]] = {None: []}
+        # (parent, start, desc_hash) -> node_id
+        self._index: Dict[Tuple[Optional[str], int, str], str] = {}
+        self._counter = 0
+        # trial_id -> (leaf node id, total steps)  for each submitted request
+        self.trial_paths: Dict[str, List[str]] = {}
+        self.default_profile: float = 1.0  # seconds/step fallback
+
+    # ------------------------------------------------------------- structure
+    def _new_node(self, parent: Optional[str], start: int, desc: Dict[str, Any]) -> PlanNode:
+        nid = f"H{self._counter}"
+        self._counter += 1
+        node = PlanNode(nid, parent, start, desc)
+        self.nodes[nid] = node
+        self.children.setdefault(parent, []).append(nid)
+        self.children.setdefault(nid, [])
+        self._index[(parent, start, stable_hash(desc))] = nid
+        return node
+
+    def get_or_create(self, parent: Optional[str], start: int, desc: Dict[str, Any]) -> PlanNode:
+        key = (parent, start, stable_hash(desc))
+        nid = self._index.get(key)
+        if nid is not None:
+            return self.nodes[nid]
+        return self._new_node(parent, start, desc)
+
+    def node(self, node_id: str) -> PlanNode:
+        return self.nodes[node_id]
+
+    def parent_of(self, node: PlanNode) -> Optional[PlanNode]:
+        return self.nodes[node.parent] if node.parent is not None else None
+
+    def path_to_root(self, node_id: str) -> List[PlanNode]:
+        """Nodes from root to ``node_id`` inclusive."""
+        out = []
+        cur: Optional[str] = node_id
+        while cur is not None:
+            n = self.nodes[cur]
+            out.append(n)
+            cur = n.parent
+        return list(reversed(out))
+
+    def path_key(self, node_id: str) -> str:
+        """Content hash identifying the value trajectory of a node's path.
+
+        Checkpoints are addressed by (path_key, step): any two trials whose
+        hp values coincide up to ``step`` share the path and therefore the
+        checkpoint — across studies too.
+        """
+        path = [(n.start, n.desc) for n in self.path_to_root(node_id)]
+        return stable_hash({"plan_key": self.key, "path": path})
+
+    # ------------------------------------------------------------ insertion
+    def submit(self, trial: Trial, upto: Optional[int] = None) -> Tuple[PlanNode, int, bool]:
+        """Insert (or match) a trial's prefix up to ``upto`` steps and record
+        a request.  Returns (leaf node, step, satisfied) where satisfied is
+        True iff metrics for that exact step are already present (§3.2 "in
+        case metrics and checkpoints ... already present, a response is
+        returned immediately")."""
+        step = trial.total_steps if upto is None else min(upto, trial.total_steps)
+        segs = trial.segments(step)
+        parent: Optional[str] = None
+        node: Optional[PlanNode] = None
+        for seg in segs:
+            node = self.get_or_create(parent, seg.start, seg.desc)
+            if trial.trial_id not in node.trials:
+                node.trials.add(trial.trial_id)
+                node.refcount += 1
+            parent = node.node_id
+        assert node is not None, "trial with zero steps"
+        self.trial_paths.setdefault(trial.trial_id, [])
+        path_ids = [n.node_id for n in self.path_to_root(node.node_id)]
+        self.trial_paths[trial.trial_id] = path_ids
+        if step in node.metrics:
+            return node, step, True
+        node.requests.add(step)
+        return node, step, False
+
+    # ------------------------------------------------------------- requests
+    def pending_requests(self) -> List[Request]:
+        """Requests with no metrics yet and not currently running."""
+        out = []
+        for n in self.nodes.values():
+            for s in sorted(n.requests):
+                if s in n.metrics or s in n.running:
+                    continue
+                out.append(Request(n.node_id, s))
+        return out
+
+    def mark_running(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.nodes[r.node_id].running.add(r.step)
+
+    def clear_running(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.nodes[r.node_id].running.discard(r.step)
+
+    def is_satisfied(self, node_id: str, step: int) -> bool:
+        return step in self.nodes[node_id].metrics
+
+    # ------------------------------------------------------------ aggregation
+    def record_result(self, node_id: str, step: int, ckpt: Optional[str],
+                      metrics: Optional[Dict[str, float]]) -> None:
+        n = self.nodes[node_id]
+        if ckpt is not None:
+            n.ckpts[step] = ckpt
+        if metrics is not None:
+            n.metrics[step] = dict(metrics)
+        n.running.discard(step)
+
+    def record_profile(self, node_id: str, seconds_per_step: float) -> None:
+        n = self.nodes[node_id]
+        if n.profile is None:
+            n.profile = seconds_per_step
+        else:  # exponential moving average keeps the estimate current
+            n.profile = 0.7 * n.profile + 0.3 * seconds_per_step
+
+    def profile_of(self, node_id: str) -> float:
+        p = self.nodes[node_id].profile
+        return self.default_profile if p is None else p
+
+    # -------------------------------------------------------------- ckpt GC
+    def release_trial(self, trial_id: str) -> List[str]:
+        """Drop a trial's references; return node ids whose refcount hit 0
+        (their checkpoints are GC candidates — beyond-paper eviction)."""
+        dead = []
+        for nid in self.trial_paths.pop(trial_id, []):
+            n = self.nodes[nid]
+            if trial_id in n.trials:
+                n.trials.discard(trial_id)
+                n.refcount -= 1
+                if n.refcount <= 0:
+                    dead.append(nid)
+        return dead
+
+    # ------------------------------------------------------------- metrics
+    def metrics_for(self, node_id: str, step: int) -> Optional[Dict[str, float]]:
+        return self.nodes[node_id].metrics.get(step)
+
+    # ---------------------------------------------------------------- stats
+    def total_requested_steps(self) -> int:
+        """Sum over trials of their max requested step (trial-based cost)."""
+        total = 0
+        for tid, path in self.trial_paths.items():
+            leaf = self.nodes[path[-1]]
+            reqs = [s for s in leaf.requests | set(leaf.metrics)]
+            total += max(reqs) if reqs else 0
+        return total
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "key": self.key,
+            "counter": self._counter,
+            "nodes": {nid: n.to_json() for nid, n in self.nodes.items()},
+            "trial_paths": self.trial_paths,
+            "default_profile": self.default_profile,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "SearchPlan":
+        plan = cls(d["key"])
+        plan._counter = d["counter"]
+        plan.default_profile = d.get("default_profile", 1.0)
+        for nid, nd in d["nodes"].items():
+            node = PlanNode.from_json(nd)
+            plan.nodes[nid] = node
+            plan.children.setdefault(node.parent, []).append(nid)
+            plan.children.setdefault(nid, [])
+            plan._index[(node.parent, node.start, stable_hash(node.desc))] = nid
+        plan.trial_paths = {k: list(v) for k, v in d["trial_paths"].items()}
+        return plan

@@ -1,0 +1,249 @@
+"""Stage trees — transient scheduling representation (Hippo §3.1, Algorithm 1).
+
+A *stage* is an executable step interval ``[start, stop)`` of one search-plan
+node's hyper-parameter configuration.  Stage trees are generated on demand
+from the search plan (they are "transient representations, used solely for
+creating scheduling units, and are not kept in the system"), so the scheduler
+stays stateless: all persistent state (checkpoints, metrics, requests) lives
+in the plan.
+
+``build_stage_tree`` implements the paper's Algorithm 1:
+
+* ``find_latest_checkpoint`` resolves every not-yet-satisfied request to the
+  nearest resume point — a checkpoint in the request's own node, a checkpoint
+  in an ancestor (via a recursive parent request), or a fresh initialization.
+  The lookup table memoizes resolutions and doubles as the set of stage
+  boundary cuts.
+* Requests whose resume path crosses a *currently running* node range are
+  deferred (resolved to ``null`` in the paper): when the running stage
+  finishes and checkpoints, a later stage tree picks the request up — exactly
+  the "computation for A3 may be repeated again, later" behaviour of §3.2.
+* Consecutive cuts inside one node become chained stages; the first stage of
+  a node attaches either to its resume checkpoint or to the parent node's
+  stage ending at ``node.start``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.searchplan import Request, SearchPlan
+
+__all__ = ["Stage", "StageTree", "build_stage_tree"]
+
+
+@dataclass
+class Stage:
+    """A schedulable unit: train node ``node_id`` over ``[start, stop)``.
+
+    ``resume`` is ``(node_id, step)`` of the checkpoint to load, or ``None``
+    for stages that either start from a fresh model (root, start=0) or chain
+    directly after ``parent`` (same worker or cross-worker dependency).
+    """
+
+    stage_id: str
+    node_id: str
+    start: int
+    stop: int
+    resume: Optional[Tuple[str, int]] = None
+    parent: Optional[str] = None                 # parent stage id
+    children: List[str] = field(default_factory=list)
+    report: bool = False                         # a request is satisfied at ``stop``
+
+    @property
+    def steps(self) -> int:
+        return self.stop - self.start
+
+    def __repr__(self):
+        src = f"ckpt{self.resume}" if self.resume else (
+            f"after {self.parent}" if self.parent else "fresh")
+        return (f"Stage({self.stage_id}: {self.node_id}[{self.start}->{self.stop}]"
+                f" {src}{' *report' if self.report else ''})")
+
+
+class StageTree:
+    """A forest of stages (multiple roots when requests resume from
+    checkpoints at different points)."""
+
+    def __init__(self):
+        self.stages: Dict[str, Stage] = {}
+        self.roots: List[str] = []
+        self._counter = 0
+
+    def new_stage(self, **kw) -> Stage:
+        sid = f"stage-{self._counter}"
+        self._counter += 1
+        st = Stage(stage_id=sid, **kw)
+        self.stages[sid] = st
+        if st.parent is None:
+            self.roots.append(sid)
+        else:
+            self.stages[st.parent].children.append(sid)
+        return st
+
+    def __len__(self):
+        return len(self.stages)
+
+    def total_steps(self) -> int:
+        return sum(s.steps for s in self.stages.values())
+
+    def leaves(self) -> List[Stage]:
+        return [s for s in self.stages.values() if not s.children]
+
+    def path_to_root(self, stage_id: str) -> List[Stage]:
+        out, cur = [], stage_id
+        while cur is not None:
+            st = self.stages[cur]
+            out.append(st)
+            cur = st.parent
+        return list(reversed(out))
+
+    def __repr__(self):
+        return f"StageTree({len(self.stages)} stages, {len(self.roots)} roots)"
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1
+# --------------------------------------------------------------------------
+
+_FRESH = ("fresh", None, 0)
+_DEFER = ("defer", None, 0)
+
+
+def _find_latest_checkpoint(plan: SearchPlan, req: Request, lookup: Dict) -> None:
+    """Resolve ``req`` to a resume point, memoized in ``lookup``.
+
+    lookup[req] is one of
+      ("ckpt",  node_id, step) — load this checkpoint,
+      ("parent", Request)      — chain after the parent request's stage,
+      ("fresh", None, 0)       — train from a fresh model,
+      ("defer", None, 0)       — a running execution covers part of the path;
+                                 revisit in a later stage tree.
+    """
+    if req in lookup:                                            # memoized (line 18)
+        return
+    node = plan.node(req.node_id)
+
+    # A running execution on this node will deposit checkpoints through the
+    # range we need — defer instead of duplicating (Algorithm 1 line 15-16:
+    # "if r.hp_config is running -> L.put(r, null)").
+    if node.running:
+        lookup[req] = _DEFER
+        return
+
+    # Nearest checkpoint within this node at or before the requested step
+    # (lines 21-25, with the linear scan replaced by a dict lookup).
+    ck = node.latest_ckpt_at_or_before(req.step)
+    if ck is not None:
+        lookup[req] = ("ckpt", node.node_id, ck)
+        return
+
+    if node.parent is None:                                      # line 18 (root)
+        lookup[req] = _FRESH
+        return
+
+    # Recurse to the parent configuration at this node's start (lines 26-28).
+    parent_req = Request(node.parent, node.start)
+    _find_latest_checkpoint(plan, parent_req, lookup)
+    if lookup[parent_req][0] == "defer":
+        lookup[req] = _DEFER
+    else:
+        lookup[req] = ("parent", parent_req)
+
+
+def build_stage_tree(plan: SearchPlan) -> StageTree:
+    """Algorithm 1: generate the stage tree of all pending requests."""
+    lookup: Dict[Request, tuple] = {}
+    pending = plan.pending_requests()
+    for req in pending:                                          # lines 3-5
+        _find_latest_checkpoint(plan, req, lookup)
+
+    tree = StageTree()
+    pending_set: Set[Request] = set(pending)
+
+    # Per-node cuts: resume step + every requested step on the node that made
+    # it into the lookup table (original or intermediate parent requests).
+    by_node: Dict[str, Dict] = {}
+    for req, res in lookup.items():
+        if res[0] == "defer":
+            continue
+        info = by_node.setdefault(req.node_id, {"cuts": set(), "resume": None})
+        info["cuts"].add(req.step)
+        if res[0] == "ckpt":
+            _, nid, step = res
+            assert nid == req.node_id
+            prev = info["resume"]
+            # several requests may resolve to different ckpts in one node;
+            # keep the earliest as the chain anchor and add the others as cuts
+            if prev is None or step < prev:
+                if prev is not None:
+                    info["cuts"].add(prev)
+                info["resume"] = step
+            else:
+                info["cuts"].add(step)
+        elif res[0] == "fresh":
+            node = plan.node(req.node_id)
+            prev = info["resume"]
+            if prev is None or node.start < prev:
+                if prev is not None:
+                    info["cuts"].add(prev)
+                info["resume"] = node.start
+
+    # Nodes reached only through ("parent", ...) have resume=None: they chain
+    # from the parent node's stage ending at node.start.
+    made: Dict[Tuple[str, int], str] = {}   # (node_id, stop step) -> stage id
+
+    def emit_node(node_id: str) -> None:
+        if made.get(("done", node_id)):
+            return
+        info = by_node[node_id]
+        node = plan.node(node_id)
+        resume = info["resume"]
+        anchor_step = resume if resume is not None else node.start
+        cuts = sorted(c for c in info["cuts"] if c > anchor_step)
+        prev_stage: Optional[str] = None
+        resume_ckpt = (node_id, resume) if (
+            resume is not None and resume in node.ckpts) else None
+        parent_stage: Optional[str] = None
+        if resume is None and node.parent is not None:
+            # chain after parent node's stage ending at node.start
+            emit_node_if_needed(node.parent)
+            parent_stage = made.get((node.parent, node.start))
+            if parent_stage is None:
+                # parent resolved to a checkpoint exactly at node.start: load it
+                pnode = plan.node(node.parent)
+                if node.start in pnode.ckpts:
+                    resume_ckpt = (node.parent, node.start)
+        # Checkpoint exists exactly at a requested step but metrics are
+        # missing: emit a zero-length eval-only stage.
+        if (anchor_step in info["cuts"]
+                and Request(node_id, anchor_step) in pending_set):
+            st = tree.new_stage(
+                node_id=node_id, start=anchor_step, stop=anchor_step,
+                resume=resume_ckpt, parent=parent_stage, report=True)
+            made[(node_id, anchor_step)] = st.stage_id
+
+        lo = anchor_step
+        for hi in cuts:
+            st = tree.new_stage(
+                node_id=node_id, start=lo, stop=hi,
+                resume=resume_ckpt if prev_stage is None else None,
+                parent=prev_stage if prev_stage is not None else parent_stage,
+                report=Request(node_id, hi) in pending_set,
+            )
+            made[(node_id, hi)] = st.stage_id
+            prev_stage = st.stage_id
+            lo = hi
+        made[("done", node_id)] = True  # type: ignore[index]
+
+    def emit_node_if_needed(node_id: str) -> None:
+        if node_id in by_node and not made.get(("done", node_id)):
+            emit_node(node_id)
+
+    # Emit parents before children (requests on ancestors appear in by_node).
+    order = sorted(by_node, key=lambda nid: len(plan.path_to_root(nid)))
+    for nid in order:
+        emit_node_if_needed(nid)
+
+    return tree

@@ -1,0 +1,74 @@
+"""Study — the user-facing client facade (Hippo §5.2, Figure 11).
+
+A study binds (model, dataset, hp-set) to a search plan in the DB and runs
+tuners against it through an execution engine.  Multiple studies created
+with the same key share a plan — submitting them to one engine yields the
+paper's multi-study merging (§6.2).
+
+Typical use (mirrors Figure 11)::
+
+    db = SearchPlanDB()
+    study = Study.create(db, model="resnet56", dataset="cifar10",
+                         hp_set=("lr", "bs"))
+    tuner = SHATuner(space.trials(120), min_steps=15, max_steps=120, eta=4)
+    stats = study.run(tuner, backend=SimulatedTrainer(), n_workers=40)
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.db import SearchPlanDB, study_key
+from repro.core.engine import EngineStats, ExecutionEngine, Tuner
+from repro.core.scheduler import CriticalPathScheduler
+from repro.core.trainer import TrainerBackend
+from repro.train.checkpoint import CheckpointStore
+
+__all__ = ["Study", "run_studies"]
+
+
+class Study:
+    def __init__(self, db: SearchPlanDB, key: str, name: str = ""):
+        self.db = db
+        self.key = key
+        self.name = name or key
+
+    @classmethod
+    def create(cls, db: SearchPlanDB, model: str, dataset: str,
+               hp_set: Sequence[str], name: str = "") -> "Study":
+        return cls(db, study_key(model, dataset, tuple(hp_set)),
+                   name or f"{model}/{dataset}")
+
+    def engine(self, backend: TrainerBackend, n_workers: int = 4,
+               gpus_per_worker: int = 1, share: bool = True,
+               weighted_paths: bool = False,
+               store: Optional[CheckpointStore] = None) -> ExecutionEngine:
+        return ExecutionEngine(
+            self.db.get(self.key), backend, n_workers=n_workers,
+            gpus_per_worker=gpus_per_worker,
+            scheduler=CriticalPathScheduler(weighted=weighted_paths),
+            store=store, share=share)
+
+    def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
+            **kw) -> EngineStats:
+        eng = self.engine(backend, n_workers=n_workers, **kw)
+        stats = eng.run([tuner])
+        self.db.checkpoint(self.key)
+        return stats
+
+
+def run_studies(studies: List[Tuple[Study, Tuner]], backend: TrainerBackend,
+                n_workers: int = 4, share: bool = True,
+                **kw) -> EngineStats:
+    """Run several studies concurrently on one engine (multi-study, §6.2).
+
+    All studies must share the same key (same model/dataset/hp-set) — the
+    paper's setting; their trials merge into one plan.
+    """
+    keys = {s.key for s, _ in studies}
+    assert len(keys) == 1, "multi-study merging requires a common study key"
+    study0 = studies[0][0]
+    eng = study0.engine(backend, n_workers=n_workers, share=share, **kw)
+    stats = eng.run([t for _, t in studies])
+    study0.db.checkpoint(study0.key)
+    return stats

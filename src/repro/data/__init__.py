@@ -1,0 +1,3 @@
+"""Data pipeline substrate."""
+
+from repro.data.pipeline import DataPipeline, synthetic_cifar, synthetic_lm_dataset

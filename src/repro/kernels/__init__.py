@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the substrate's compute hot spots.
+
+Hippo itself is an execution-layer contribution (no kernel of its own);
+these kernels cover the two hot spots of the assigned-architecture
+substrate: flash attention (dense/GQA families) and the SSD intra-chunk
+term (Mamba2).  Layout: ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrappers + custom VJP), ``ref.py`` (pure-jnp oracles).
+"""

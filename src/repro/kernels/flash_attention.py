@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention (forward) with GQA, causal and window masks.
+
+Blockwise online-softmax attention à la Flash-Attention-2, tiled for the
+TPU memory hierarchy:
+
+* grid = (batch, q_heads, Sq/BQ, Sk/BK); the KV dimension is the innermost
+  (sequential on TPU), so the running (m, l, acc) statistics live in VMEM
+  scratch across KV steps;
+* ``BlockSpec`` tiles: Q block (BQ, hd), K/V blocks (BK, hd) — BQ = BK =
+  128 by default, MXU-aligned; the working set per step is
+  ``(BQ + 2·BK)·hd·4`` bytes ≪ 16 MB VMEM;
+* GQA without materializing repeated KV heads: the K/V index_map sends
+  query-head ``h`` to KV head ``h // group``;
+* causal/sliding-window masking is applied per-tile from absolute
+  positions; fully-masked tiles still execute (structured skipping via
+  ``pl.when`` is a TPU-side optimization; on the interpret path we keep it
+  simple and correct).
+
+Validated against :mod:`repro.kernels.ref` in ``interpret=True`` mode
+(kernel body executed step-by-step on CPU); on real TPUs the same code
+compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (BK, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+    s = s * scale
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                      # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                   # (BQ, BK)
+
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        # rows that saw no valid key (padding) get l = 0 → emit zeros
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd) → (B, Sq, Hq, hd).
+
+    Hq must be a multiple of Hkv (GQA).  Sequences are padded to the block
+    size internally; padded keys are masked out, padded queries dropped.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = hd ** -0.5
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    Sqp, Skp = Sq + pq, Sk + pk
+
+    # layout: (B, H, S, hd) for clean 2D blocks
+    qt = qp.transpose(0, 2, 1, 3)
+    kt = kp.transpose(0, 2, 1, 3)
+    vt = vp.transpose(0, 2, 1, 3)
+
+    grid = (B, Hq, Sqp // bq, Skp // bk)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq] if pq else out

@@ -1,0 +1,71 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``flash_attention`` / ``ssd_intra`` are what the model layer calls when
+``use_kernel=True``.  On CPU (this container) they run the kernel bodies in
+``interpret=True`` mode for correctness validation; on TPU the same calls
+compile to Mosaic.  Both fall back to the jnp oracle under ``vmap``/AD
+transforms where the kernel is forward-only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ref import attention_ref, ssd_intra_ref
+from repro.kernels.ssd_scan import ssd_intra_pallas
+
+__all__ = ["flash_attention", "ssd_intra"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fa(q, k, v, causal, window):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return _fa(q, k, v, causal, window), (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    # backward through the reference (XLA) attention — the paper's workloads
+    # serve/evaluate through the kernel; training backprop stays in XLA.
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(
+        q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """(B,S,Hq,hd) GQA flash attention; differentiable (XLA backward)."""
+    return _fa(q, k, v, causal, window)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _ssd(xr, dtr, ltT, Br, Cr):
+    return ssd_intra_pallas(xr, dtr, ltT, Br, Cr)
+
+
+def _ssd_fwd(xr, dtr, ltT, Br, Cr):
+    return _ssd(xr, dtr, ltT, Br, Cr), (xr, dtr, ltT, Br, Cr)
+
+
+def _ssd_bwd(res, g):
+    xr, dtr, ltT, Br, Cr = res
+    _, vjp = jax.vjp(ssd_intra_ref, xr, dtr, ltT, Br, Cr)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_intra(xr, dtr, ltT, Br, Cr):
+    """Intra-chunk SSD term via the Pallas kernel (XLA backward)."""
+    return _ssd(xr, dtr, ltT, Br, Cr)

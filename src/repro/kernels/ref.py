@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_intra_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Naive softmax attention with GQA; q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd)."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, hd)
+    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def ssd_intra_ref(xr: jnp.ndarray, dtr: jnp.ndarray, ltT: jnp.ndarray,
+                  Br: jnp.ndarray, Cr: jnp.ndarray) -> jnp.ndarray:
+    """Naive intra-chunk SSD: the masked-decay attention form.
+
+    Shapes as :func:`repro.kernels.ssd_scan.ssd_intra_pallas`.
+    """
+    Q = xr.shape[2]
+    cum = jnp.cumsum(ltT, axis=-1)                       # (B,nc,H,Q)
+    seg = cum[..., :, None] - cum[..., None, :]          # (B,nc,H,Q,Q)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr.astype(jnp.float32),
+                    Br.astype(jnp.float32))
+    att = cb[:, :, None] * decay * jnp.moveaxis(dtr, -1, -2)[..., None, :]
+    y = jnp.einsum("bchij,bcjhp->bcihp", att, xr.astype(jnp.float32))
+    return y.astype(xr.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the SSD intra-chunk term (Mamba2 hot spot).
+
+Within a chunk of ``Q`` steps the SSD output is an attention-like product::
+
+    att[i, j] = (C_i · B_j) · exp(cum_i − cum_j) · dt_j     (j ≤ i)
+    y[i]      = Σ_j att[i, j] · x_j
+
+— two Q×N and one Q×Q matmul per (batch, chunk, head): exactly the MXU
+shape the TPU wants when Q = N = 128 (mamba2-2.7b's configuration).  The
+kernel computes one (batch, chunk, head) cell per grid step with all
+operands resident in VMEM:
+
+  VMEM working set = Q·N (C) + Q·N (B) + Q (cum) + Q (dt) + Q·P (x)
+                   + Q·Q (att) + Q·P (y) ≈ 0.3 MB at Q=N=P=128 — far under
+  the ~16 MB budget, leaving headroom for double-buffered pipelining.
+
+The inter-chunk state hand-off stays in XLA (a ``lax.scan`` of rank-1
+updates — bandwidth-bound, nothing for the MXU), mirroring how the paper's
+CUDA SSD kernel splits intra/inter work.  Oracle: ``ref.ssd_intra_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_intra_pallas"]
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, o_ref, *, q: int):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)         # (Q,)
+    cum = cum_ref[0, 0, 0].astype(jnp.float32)       # (Q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)             # (Q, N)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    seg = cum[:, None] - cum[None, :]                            # cum_i - cum_j
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = j_pos <= i_pos
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    att = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())))    # (Q, P)
+    o_ref[0, 0, :, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_intra_pallas(xr: jnp.ndarray, dtr: jnp.ndarray, ltT: jnp.ndarray,
+                     Br: jnp.ndarray, Cr: jnp.ndarray,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Intra-chunk SSD term.
+
+    xr  (B, nc, Q, H, P)  chunked head inputs
+    dtr (B, nc, Q, H)     per-step dt
+    ltT (B, nc, H, Q)     per-step log-decay (dt·A), head-major
+    Br/Cr (B, nc, Q, N)   state in/out projections (shared across heads)
+    → y (B, nc, Q, H, P)
+    """
+    B, nc, Q, H, P = xr.shape
+    N = Br.shape[-1]
+    cum = jnp.cumsum(ltT, axis=-1)                   # (B, nc, H, Q)
+
+    # head-major layouts so each grid cell reads contiguous blocks
+    x_hm = jnp.moveaxis(xr, 3, 2)                    # (B, nc, H, Q, P)
+    dt_hm = jnp.moveaxis(dtr, 3, 2)                  # (B, nc, H, Q)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    grid = (B * nc, H)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda bc, h: (bc, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bc, h: (bc, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bc, h: (bc, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, 1, P), lambda bc, h: (bc, h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nc, H, Q, 1, P), xr.dtype),
+        interpret=interpret,
+    )(
+        x_hm.reshape(B * nc, H, Q, 1, P),
+        dt_hm.reshape(B * nc, H, 1, Q),
+        cum.reshape(B * nc, H, 1, Q),
+        Br.reshape(B * nc, 1, Q, N),
+        Cr.reshape(B * nc, 1, Q, N),
+    )
+    y = out.reshape(B, nc, H, Q, P)
+    return jnp.moveaxis(y, 2, 3)                     # (B, nc, Q, H, P)

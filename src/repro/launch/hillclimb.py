@@ -1,0 +1,74 @@
+"""Perf hillclimbing driver (§Perf): re-lower a case under variant
+sharding/config rules and compare roofline terms against the baseline.
+
+    python -m repro.launch.hillclimb --arch grok-1-314b --shape train_4k \
+        --variant no-fsdp seqpar --out results/hillclimb.jsonl
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+from repro.analysis.roofline import roofline_terms
+from repro.dist.sharding import ShardingRules
+from repro.launch.dryrun import run_case
+
+# name → (rules overrides, cfg overrides)
+VARIANTS = {
+    "baseline": ({}, {}),
+    # drop FSDP: weights replicated over `data` — kills the per-layer
+    # all-gather at the cost of per-device weight memory
+    "no-fsdp": ({"fsdp": None}, {}),
+    # sequence parallelism: residual stream sharded over `model` between
+    # blocks — activation memory / HBM traffic ÷16
+    "seqpar": ({"seq": "model"}, {}),
+    # pure data parallel (tp off): no tensor collectives, replicated weights
+    "dp-only": ({"tp": None, "fsdp": None}, {}),
+    # no activation checkpointing: recompute off → compute term down,
+    # activation memory up
+    "no-remat": ({}, {"remat": False}),
+    # MoE: tighter capacity → smaller dispatch buffers / all-to-all
+    "cap-1.0": ({}, {"capacity_factor": 1.0}),
+    # bf16 → f32 master activations comparison
+    "f32": ({}, {"dtype": "float32"}),
+}
+
+
+def run_variant(arch, shape, variant, multi_pod=False):
+    r_over, c_over = VARIANTS[variant]
+    rules = dataclasses.replace(ShardingRules.for_mesh(multi_pod), **r_over)
+    rec = run_case(arch, shape, multi_pod=multi_pod, rules=rules,
+                   cfg_overrides=c_over or None, tag=variant, verbose=True)
+    if rec["status"] == "ok":
+        rec["roofline"] = roofline_terms(rec, 512 if multi_pod else 256)
+    rec["variant"] = variant
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", nargs="+", default=["baseline"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    for v in args.variant:
+        rec = run_variant(args.arch, args.shape, v, args.multi_pod)
+        t = rec.get("roofline", {})
+        print(f"{args.arch} × {args.shape} [{v}]: "
+              f"compute {t.get('compute_s', float('nan')):.4g}s  "
+              f"memory {t.get('memory_s', float('nan')):.4g}s  "
+              f"collective {t.get('collective_s', float('nan')):.4g}s  "
+              f"dominant={t.get('dominant')}")
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis maps
+to the DCN dimension — only data parallelism (gradient all-reduce) and
+expert parallelism cross it.
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes"]
+
+
+def mesh_axes(*, multi_pod: bool = False):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = mesh_axes(multi_pod=multi_pod)
+    return jax.make_mesh(shape, axes)

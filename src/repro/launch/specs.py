@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+``input_specs`` mirrors what the data pipeline / serving frontend would
+feed each step: token ids for LM training, patch/frame embeddings for the
+stubbed VLM/audio frontends, (cache, token, index) for decode.  No device
+memory is allocated — these drive ``jit(...).lower()`` only.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+
+__all__ = ["input_specs", "batch_struct"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Training/prefill batch for one global step."""
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "audio":
+        return {"features": _sds((batch, seq, cfg.frontend_dim), act),
+                "labels": _sds((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision":
+        P = cfg.frontend_tokens
+        assert seq > P, (seq, P)
+        return {"tokens": _sds((batch, seq - P), jnp.int32),
+                "patches": _sds((batch, P, cfg.frontend_dim), act),
+                "positions": _sds((3, batch, seq), jnp.int32)}
+    return {"tokens": _sds((batch, seq), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape
+                ) -> Tuple[str, Dict[str, Any]]:
+    """Returns (step kind, kwargs structs) for the shape's lowered step.
+
+    * train_4k            → ``train_step(params, opt, batch, step)``
+    * prefill_32k         → ``prefill_step(params, batch)``
+    * decode_32k/long_500k→ ``serve_step(params, cache, tokens, index)``
+    """
+    if shape.kind in ("train", "prefill"):
+        return shape.kind, {
+            "batch": batch_struct(cfg, shape.global_batch, shape.seq_len)}
+
+    model = LM(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    return "decode", {
+        "cache": cache,
+        "tokens": _sds((shape.global_batch, 1), jnp.int32),
+        "index": _sds((), jnp.int32),
+    }

@@ -1,0 +1,4 @@
+"""Model substrate: the six architecture families in pure JAX."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM

@@ -1,0 +1,214 @@
+"""Grouped-query attention with RoPE/M-RoPE, qk-norm, QKV bias, windowing.
+
+Covers every attention variant the assigned architectures need:
+
+* GQA with arbitrary (num_heads, num_kv_heads) — yi-34b 56/8, granite MQA
+  48/1, hubert MHA 16/16;
+* ``qkv_bias`` (qwen2), ``qk_norm`` (qwen3: RMSNorm over each head's q,k);
+* plain RoPE or M-RoPE (qwen2-vl 3-axis sections);
+* masks: causal, sliding-window causal, local (hybrid "local" layers),
+  bidirectional (encoder-only);
+* decode with a ring-buffer KV cache (window-bounded for sliding-window →
+  O(window) memory at 524k context).
+
+Training/prefill attention can route through the Pallas flash kernel
+(``repro.kernels.ops.flash_attention``) via ``use_kernel=True``; the jnp
+path below is the reference and the default on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_rope, dense_init, init_rms,
+                                 mrope_angles, rms_norm, rope_angles)
+
+__all__ = ["init_attention", "attention_forward", "attention_decode",
+           "init_kv_cache", "make_mask"]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    """Projection weights are stored with an explicit head axis —
+    (D, H, hd) — so tensor parallelism shards whole heads: a flat
+    (D, H·hd) layout lets GSPMD split *within* a head whenever H does not
+    divide the mesh axis (yi-34b: 56 q / 8 kv heads on model=16), which
+    turns every score einsum into a partial-sum all-reduce of the full
+    (B, S, S) tensor — the dominant collective of the naive baseline
+    (see EXPERIMENTS.md §Perf iteration 1)."""
+    hd = cfg.resolved_head_dim
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, cfg.num_heads * hd),
+                         dtype=dtype).reshape(D, cfg.num_heads, hd),
+        "wk": dense_init(ks[1], (D, cfg.num_kv_heads * hd),
+                         dtype=dtype).reshape(D, cfg.num_kv_heads, hd),
+        "wv": dense_init(ks[2], (D, cfg.num_kv_heads * hd),
+                         dtype=dtype).reshape(D, cfg.num_kv_heads, hd),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, D),
+                         dtype=dtype).reshape(cfg.num_heads, hd, D),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd, dtype)
+        p["k_norm"] = init_rms(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x):
+    """x (B,S,D) → q (B,S,Hq,hd), k/v (B,S,Hkv,hd), head axis explicit."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def make_mask(q_len: int, kv_len: int, *, causal: bool, window: int = 0,
+              q_offset: int = 0) -> Optional[jnp.ndarray]:
+    """Boolean (q_len, kv_len) mask; True = attend.  ``window > 0`` keeps
+    only keys within ``window`` positions behind the query (sliding window /
+    local attention).  ``q_offset`` is the absolute position of query 0
+    (prefill chunking)."""
+    if not causal and window <= 0:
+        return None
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# core attention
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qk_rope(cfg: ModelConfig, q, k, positions):
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        cos, sin = mrope_angles(positions, hd, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def _sdpa(q, k, v, mask, n_kv: int):
+    """(B,S,Hq,hd) x (B,T,Hkv,hd) grouped attention, fp32 softmax."""
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    group = Hq // n_kv
+    q = q.reshape(B, S, n_kv, group, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", q, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v)
+    return out.reshape(B, S, Hq, hd)
+
+
+def attention_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                      positions: jnp.ndarray, *, window: int = 0,
+                      use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, D); positions: (B, S) or (3, B, S) for M-RoPE.
+    ``window``: 0 = per-config full/causal; >0 overrides with that window.
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x)
+    q, k = _qk_rope(cfg, q, k, positions)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=cfg.causal, window=window)
+    else:
+        mask = make_mask(S, S, causal=cfg.causal, window=window)
+        out = _sdpa(q, k, v, mask, cfg.num_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                  dtype) -> Dict[str, jnp.ndarray]:
+    """Ring-buffer cache.  Buffer length = window if sliding, else max_len —
+    the window bound is what makes ``long_500k`` decode O(window) for the
+    dense archs."""
+    L = window if window > 0 else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def attention_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                     cache: Dict[str, jnp.ndarray], index: jnp.ndarray,
+                     *, window: int = 0) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode.  x: (B, 1, D); index: scalar int32 — the absolute
+    position of the new token.  Returns (out (B,1,D), new cache)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    L = cache["k"].shape[1]
+
+    q, k, v = _project_qkv(params, cfg, x)
+    pos = jnp.full((B, 1), index, jnp.int32)
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    q, k = _qk_rope(cfg, q, k, pos)
+
+    slot = jnp.mod(index, L)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    # validity: slot s holds absolute position p(s) = s + L*floor(...) — with
+    # a ring buffer the live positions are (index-L, index]; all slots are
+    # live once index >= L-1, and window-expiry is implicit in the overwrite.
+    k_slots = jnp.arange(L)
+    live = k_slots <= index                       # before wrap: only filled slots
+    scores_mask = live[None, :]                   # (1, L)
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    qh = q.reshape(B, 1, cfg.num_kv_heads, group, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qh, ck).astype(jnp.float32)
+    scores *= hd ** -0.5
+    scores = jnp.where(scores_mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, cv)
+    out = out.reshape(B, 1, cfg.num_heads, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": ck, "v": cv}

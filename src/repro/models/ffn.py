@@ -1,0 +1,132 @@
+"""Feed-forward blocks: SwiGLU MLP and Mixture-of-Experts.
+
+The MoE layer covers both assigned MoE architectures:
+
+* grok-1-314b:    8 routed experts, top-2, no shared experts;
+* qwen2-moe-a2.7b: 60 routed experts (d_ff 1408), top-4, plus 4 shared
+  experts implemented as one always-on SwiGLU of hidden 4×1408
+  (= ``shared_d_ff``).
+
+Dispatch uses the standard capacity-based one-hot formulation: tokens are
+combined into per-expert buffers with an einsum whose expert dimension is
+sharded over the ``model`` mesh axis — under GSPMD this lowers to the
+expert-parallel all-to-all the paper's technique cares about.  An auxiliary
+load-balancing loss (Shazeer-style) is returned for the train step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["init_mlp", "mlp_forward", "init_moe", "moe_forward"]
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(d_model: int, d_ff: int, key, dtype, gated: bool = True
+             ) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, (d_model, d_ff), dtype=dtype),     # up
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(k2, (d_model, d_ff), dtype=dtype)  # gate
+    return p
+
+
+def mlp_forward(params, x: jnp.ndarray) -> jnp.ndarray:
+    if "wg" in params:
+        return (jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])) @ params["wo"]
+    return jax.nn.gelu(x @ params["wi"]) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k1, (D, E), scale=D ** -0.5, dtype=jnp.float32),
+        "wi": dense_init(k2, (E, D, F), dtype=dtype),
+        "wg": dense_init(k3, (E, D, F), dtype=dtype),
+        "wo": dense_init(k4, (E, F, D), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(D, cfg.shared_d_ff, k5, dtype)
+    return p
+
+
+_GROUP_TOKENS = 4096  # dispatch-group size (MaxText-style token groups)
+
+
+def moe_forward(params, cfg: ModelConfig, x: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (out, aux_loss).
+
+    Token-grouped top-k routing: tokens are split into groups of ~4096 and
+    each group gets its own expert capacity ``C = ceil(cf · Tg·k / E)`` —
+    the dispatch one-hots are (G, Tg, E, C) instead of a single global
+    (T, E, C) whose capacity (and memory) would scale with the *global*
+    batch.  The group dim inherits the batch's data sharding; the (g → e)
+    buffer einsum is the expert-parallel all-to-all.  Overflow tokens are
+    dropped (standard Switch behaviour).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = T // _GROUP_TOKENS if T % _GROUP_TOKENS == 0 else 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])            # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                 # (G,Tg,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- aux load-balance loss: E * sum_e f_e * p_e (global means)
+    me = jnp.mean(probs, axis=(0, 1))                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    capacity = int(max(K, cfg.capacity_factor * Tg * K / E))
+    # position of each (token, k) within its expert's per-group buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)         # (G,Tg,K,E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) * flat - 1
+    pos = pos_in_expert.reshape(G, Tg, K, E).max(-1)                # (G,Tg,K)
+    keep = pos < capacity
+
+    # dispatch / combine one-hots; overflow (pos >= capacity) maps to the
+    # out-of-range index `capacity`, which one_hot encodes as all-zeros
+    e_onehot = jax.nn.one_hot(expert_idx, E, dtype=xt.dtype)        # (G,Tg,K,E)
+    c_onehot = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                              dtype=xt.dtype)                       # (G,Tg,K,C)
+    disp = jnp.einsum("gtke,gtkc->gtec", e_onehot, c_onehot)        # (G,Tg,E,C)
+    buf = jnp.einsum("gtd,gtec->gecd", xt, disp)                    # (G,E,C,D)
+
+    # expert computation; the (g,e) layout is where expert parallelism
+    # lives — E sharded over the ep axis makes this the all-to-all
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, params["wi"])
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["wo"])         # (G,E,C,D)
+
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", e_onehot, c_onehot,
+                      (gate_vals * keep).astype(xt.dtype))          # (G,Tg,E,C)
+    out = jnp.einsum("gecd,gtec->gtd", out_buf, comb)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_forward(params["shared"], xt)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,82 @@
+"""Shared neural building blocks: norms, embeddings, RoPE / M-RoPE."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "init_rms", "embed_init", "rope_angles", "apply_rope",
+           "mrope_angles", "dense_init", "Param"]
+
+Param = jnp.ndarray
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (what llama-family checkpoints use)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def init_rms(d: int, dtype=jnp.float32) -> Param:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: Param, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 1e4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for plain RoPE.  positions: (..., S) int32 →
+    (..., S, head_dim/2) each."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, sections,
+                 theta: float = 1e4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multimodal RoPE (Qwen2-VL §2): the frequency axis is partitioned into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    positions: (3, ..., S); sections sum to head_dim/2.
+    Returns cos/sin of shape (..., S, head_dim/2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # section id of each frequency slot
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos_i = positions[i].astype(jnp.float32)[..., None]          # (...,S,1)
+        parts.append(pos_i * freq[off:off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)                            # (...,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); cos/sin: (..., S, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)

@@ -1,0 +1,100 @@
+"""Compact CIFAR ResNet (the paper-faithful example model family).
+
+The paper's single-study experiments tune ResNet56/MobileNetV2 on
+CIFAR-10.  This is a functional JAX ResNet of the same shape family
+(3 stages × n blocks, channels 16/32/64, stride-2 stage transitions) —
+``n=9`` gives ResNet56; the CPU examples default to ``n=1`` (ResNet8).
+Normalization is channel RMS-norm (stateless — keeps training a pure
+function of (params, batch), which the losslessness property test relies
+on; BN's running stats would work too but add checkpoint state for no
+benefit at this scale).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ResNet"]
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    return jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout)) * (
+        2.0 / fan_in) ** 0.5
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _norm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+class ResNet:
+    def __init__(self, n: int = 1, num_classes: int = 10, width: int = 16):
+        self.n = n
+        self.num_classes = num_classes
+        self.width = width
+        self.depth = 6 * n + 2
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict[str, Any]:
+        w = self.width
+        chans = [w, 2 * w, 4 * w]
+        keys = jax.random.split(rng, 3 * self.n * 2 + 2)
+        ki = 0
+        params: Dict[str, Any] = {
+            "stem": _conv_init(keys[ki], 3, 3, w), "stem_g": jnp.ones((w,))}
+        ki += 1
+        stages = []
+        cin = w
+        for s, c in enumerate(chans):
+            blocks = []
+            for b in range(self.n):
+                stride = 2 if (s > 0 and b == 0) else 1
+                k1, k2, k3 = jax.random.split(keys[ki], 3)
+                ki += 1
+                blk = {
+                    "c1": _conv_init(k1, 3, cin, c), "g1": jnp.ones((c,)),
+                    "c2": _conv_init(k2, 3, c, c), "g2": jnp.ones((c,)),
+                }
+                if stride != 1 or cin != c:
+                    blk["proj"] = _conv_init(k3, 1, cin, c)
+                blocks.append(blk)
+                cin = c
+            stages.append(blocks)
+        params["stages"] = stages
+        params["head"] = jax.random.truncated_normal(
+            keys[ki], -2, 2, (chans[-1], self.num_classes)) * chans[-1] ** -0.5
+        params["head_b"] = jnp.zeros((self.num_classes,))
+        return params
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch) -> jnp.ndarray:
+        x = batch["images"]
+        x = jax.nn.relu(_norm(_conv(x, params["stem"]), params["stem_g"]))
+        for s, blocks in enumerate(params["stages"]):
+            for b, blk in enumerate(blocks):
+                stride = 2 if (s > 0 and b == 0) else 1
+                h = jax.nn.relu(_norm(_conv(x, blk["c1"], stride), blk["g1"]))
+                h = _norm(_conv(h, blk["c2"]), blk["g2"])
+                sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+                x = jax.nn.relu(sc + h)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ params["head"] + params["head_b"]
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return jnp.mean(nll), {"acc": acc}

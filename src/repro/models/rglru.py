@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-gated linear recurrent unit::
+
+    r_t = σ(g_r ⊙ u_t)                       (recurrence gate, per-channel)
+    a_t = exp(c · r_t · log σ(Λ))            (gated per-channel decay, c=8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ u_t
+
+wrapped in the Griffin recurrent block: input/gate linear branches, a short
+depthwise temporal conv on the recurrent branch, GeLU gating and an output
+projection.  The linear recurrence runs as a ``jax.lax.associative_scan``
+(log-depth, TPU-friendly), giving O(S log S) work with O(1) decode state —
+``long_500k`` is native for the hybrid family.
+
+This uses per-channel (diagonal) gates — the lightweight variant — rather
+than Griffin's block-diagonal gate matrices; noted in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["init_rglru", "rglru_forward", "rglru_decode", "init_rglru_cache"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    W = cfg.rglru_width or D
+    ks = jax.random.split(key, 4)
+    # Λ init so that σ(Λ) ∈ (0.9, 0.999) — long memories (Griffin §2.4)
+    u = jax.random.uniform(ks[3], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_in": dense_init(ks[0], (D, W), dtype=dtype),
+        "w_gate": dense_init(ks[1], (D, W), dtype=dtype),
+        "w_out": dense_init(ks[2], (W, D), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.ssm_conv, W))
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "lam": lam.astype(jnp.float32),
+        "g_r": jnp.ones((W,), jnp.float32),
+    }
+
+
+def _gates(params, u: jnp.ndarray):
+    """Per-step decay a_t and input scale from the branch activations."""
+    r = jax.nn.sigmoid(u.astype(jnp.float32) * params["g_r"])
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"])       # (B,S,W) ≤ 0
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, scale
+
+
+def _linear_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along axis 1, via associative scan."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, (xp[:, -(K - 1):] if K > 1 else None)
+
+
+def rglru_forward(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,D) → (B,S,D)."""
+    u = x @ params["w_in"]
+    u, _ = _conv(u, params["conv_w"])
+    a, scale = _gates(params, u)
+    h = _linear_scan(a, scale * u.astype(jnp.float32)).astype(x.dtype)
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    return (h * gate) @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    W = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, W), dtype),
+    }
+
+
+def rglru_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,D); O(1) state update."""
+    u = x @ params["w_in"]
+    u, conv_state = _conv(u, params["conv_w"], cache["conv"])
+    a, scale = _gates(params, u)                             # (B,1,W)
+    h = a[:, 0] * cache["h"] + (scale * u.astype(jnp.float32))[:, 0]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    out = (h[:, None].astype(x.dtype) * gate) @ params["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,256 @@
+"""Mamba2 — state-space duality (SSD) layer (Dao & Gu, arXiv:2405.21060).
+
+The layer computes, per head ``h`` with scalar decay ``A_h < 0``::
+
+    state_t = exp(dt_t A) state_{t-1} + dt_t · B_t ⊗ x_t      (N×P state)
+    y_t     = C_t · state_t + D ⊙ x_t
+
+Computation is *chunked* (the SSD algorithm): the sequence is split into
+chunks of ``Q`` steps; each chunk does a quadratic attention-like intra-
+chunk term (the part the Pallas kernel accelerates — MXU-friendly Q×Q
+matmuls) and a rank-1 state hand-off between chunks via ``lax.scan`` —
+O(S·Q) total, which is what makes ``long_500k`` native for this family.
+
+B and C are shared across heads (``ngroups=1``, Mamba2 default — the MQA
+analogue).  The block wraps SSD with the usual in-projection producing
+(z, x, B, C, dt), a causal depthwise conv over (x,B,C), gated RMSNorm and
+an out-projection.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rms, rms_norm
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_cache",
+           "ssd_chunked", "ssd_sequential"]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(lt: jnp.ndarray) -> jnp.ndarray:
+    """lt: (..., Q) per-step log-decays → (..., Q, Q) matrix
+    ``M[i, j] = sum(lt[j+1..i])`` for j ≤ i, -inf above the diagonal."""
+    Q = lt.shape[-1]
+    cs = jnp.cumsum(lt, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # cum_i - cum_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x  (B,S,H,P)   dt (B,S,H)   A (H,)   Bm,Cm (B,S,N)  (shared over heads)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc, Q = S // chunk, chunk
+
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    lt = dtr * A                                         # (B,nc,Q,H) log-decay
+    ltT = jnp.moveaxis(lt, -1, -2)                       # (B,nc,H,Q)
+    cum = jnp.cumsum(ltT, axis=-1)                       # (B,nc,H,Q)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y_intra = kops.ssd_intra(xr, dtr, ltT, Br, Cr)
+    else:
+        # ---- intra-chunk (quadratic in Q): att[i,j] = (C_i·B_j)·exp(seg)·dt_j
+        seg = _segsum(ltT)                               # (B,nc,H,Q,Q)
+        cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)       # (B,nc,Q,Q)
+        att = cb[:, :, None] * jnp.exp(seg) * jnp.moveaxis(dtr, -1, -2)[..., None, :]
+        y_intra = jnp.einsum("bchij,bcjhp->bcihp", att.astype(x.dtype), xr)
+
+    # ---- per-chunk end state: sum_j exp(cum_Q - cum_j) dt_j B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)          # (B,nc,H,Q)
+    w = (jnp.moveaxis(dtr, -1, -2) * decay_to_end)       # (B,nc,H,Q)
+    chunk_states = jnp.einsum("bchq,bcqn,bcqhp->bchpn",
+                              w.astype(x.dtype), Br, xr)  # (B,nc,H,P,N)
+    total_decay = jnp.exp(cum[..., -1])                  # (B,nc,H)
+
+    # ---- inter-chunk recurrence over nc chunks
+    s0 = (jnp.zeros((Bsz, H, P, N), x.dtype)
+          if init_state is None else init_state.astype(x.dtype))
+
+    def step(s, inp):
+        cs, td = inp                                     # (B,H,P,N), (B,H)
+        s_in = s
+        s = s * td[..., None, None].astype(x.dtype) + cs
+        return s, s_in
+
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)              # (nc,B,H,P,N)
+    td_t = jnp.moveaxis(total_decay, 1, 0)               # (nc,B,H)
+    final, prev_states = jax.lax.scan(step, s0, (cs_t, td_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: y_inter[i] = exp(cum_i) · C_i @ S_prev
+    dec_in = jnp.exp(cum)                                # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cr, prev_states,
+                         dec_in.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, init_state=None):
+    """Step-by-step oracle for tests (O(S) sequential scan)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                        # (B,H,P),(B,H),(B,N),(B,N)
+        dA = jnp.exp(dt_t * A)                           # (B,H)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    """Projections are stored as separate matrices (z, x, B, C, dt) rather
+    than one fused ``in_proj`` so each can carry its own sharding: z/x are
+    head-sharded over the ``model`` axis (tensor parallelism), B/C/dt are
+    small and replicated on that axis.  Same parameter count as the fused
+    form; the depthwise conv likewise splits per stream."""
+    D, inner, N, H = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    K = cfg.ssm_conv
+    return {
+        "in_z": dense_init(ks[0], (D, inner), dtype=dtype),
+        "in_x": dense_init(ks[1], (D, inner), dtype=dtype),
+        "in_B": dense_init(ks[2], (D, N), dtype=dtype),
+        "in_C": dense_init(ks[3], (D, N), dtype=dtype),
+        "in_dt": dense_init(ks[4], (D, H), dtype=dtype),
+        "conv_x": (jax.random.normal(ks[5], (K, inner)) * K ** -0.5).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (K, N)) * K ** -0.5).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (K, N)) * K ** -0.5).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": init_rms(inner, dtype),
+        "out_proj": dense_init(ks[3], (inner, D), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (B,S,C), w (K,C).  ``state`` (B,K-1,C) is the
+    carried left context for decode; returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B,S+K-1,C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y, new_state
+
+
+def _ssm_project(params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state=None):
+    """Project and run the causal conv per stream; returns
+    (z, xs, Bm, Cm, dt_raw, new_conv_state)."""
+    z = x @ params["in_z"]
+    xs = x @ params["in_x"]
+    Bm = x @ params["in_B"]
+    Cm = x @ params["in_C"]
+    dt_raw = x @ params["in_dt"]
+    cs = conv_state or {}
+    xs, s_x = _causal_conv(xs, params["conv_x"], cs.get("x"))
+    Bm, s_B = _causal_conv(Bm, params["conv_B"], cs.get("B"))
+    Cm, s_C = _causal_conv(Cm, params["conv_C"], cs.get("C"))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    return z, xs, Bm, Cm, dt_raw, {"x": s_x, "B": s_B, "C": s_C}
+
+
+def _ssm_post(params, cfg: ModelConfig, y, z, x_in):
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    y = y + x_in * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(*y.shape[:-2], H * P)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def ssm_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """x: (B,S,D) → (B,S,D)."""
+    B, S, D = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt_raw, _ = _ssm_project(params, cfg, x)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, S, H, P)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, use_kernel=use_kernel)
+    return _ssm_post(params, cfg, y, z, xh)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    inner, N = cfg.ssm_inner, cfg.ssm_state
+    K = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N), dtype),
+        "conv": {"x": jnp.zeros((batch, K - 1, inner), dtype),
+                 "B": jnp.zeros((batch, K - 1, N), dtype),
+                 "C": jnp.zeros((batch, K - 1, N), dtype)},
+    }
+
+
+def ssm_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode: x (B,1,D) → (B,1,D); O(1) state update."""
+    B = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt_raw, conv_state = _ssm_project(params, cfg, x,
+                                                     cache["conv"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, 1, H, P)
+
+    dA = jnp.exp(dt[:, 0] * A)                           # (B,H)
+    state = cache["state"].astype(jnp.float32)
+    state = (state * dA[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn",
+                          (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+                          Bm[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, 0].astype(jnp.float32))
+    y = y[:, None].astype(x.dtype)                       # (B,1,H,P)
+    out = _ssm_post(params, cfg, y, z, xh)
+    return out, {"state": state.astype(cache["state"].dtype), "conv": conv_state}

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, checkpoint store, jitted step functions."""

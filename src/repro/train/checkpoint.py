@@ -1,0 +1,145 @@
+"""Content-addressed checkpoint store (the GlusterFS analogue, §5 / §4.1).
+
+Checkpoints are arbitrary pytrees (model params, optimizer state, data
+pipeline cursor, PRNG key, simulated-trainer state, ...) addressed by the
+*computation that produced them*: ``key = (search-plan path hash, step)``.
+Any two trials — in the same study or different studies — whose
+hyper-parameter values coincide up to ``step`` resolve to the same key and
+therefore share the checkpoint, which is the entire reuse mechanism.
+
+Two backends:
+
+* in-memory (default) — for tests, simulation and single-process studies;
+* directory spill     — ``.npz``-serialized leaves + JSON treedef, the
+  layout a real deployment would put on a distributed file system.
+
+Beyond-paper: reference-counted eviction (``evict``) with
+recompute-on-miss handled upstream (the engine simply re-derives the stage
+from the search plan if a resume checkpoint is gone).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+try:  # jax is always present in this repo, but the store works without it
+    import jax
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover
+    _HAVE_JAX = False
+
+__all__ = ["CheckpointStore"]
+
+
+def _tree_flatten(tree: Any):
+    if _HAVE_JAX:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return leaves, treedef
+    raise RuntimeError("jax required for pytree checkpoints")
+
+
+class CheckpointStore:
+    """put/get pytrees by (path_key, step); optionally spill to a directory."""
+
+    def __init__(self, directory: Optional[str] = None):
+        self.directory = directory
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+        self._mem: Dict[str, Any] = {}
+        self.bytes_written = 0
+        self.puts = 0
+        self.gets = 0
+        self.hits = 0
+
+    # -------------------------------------------------------------- keys
+    @staticmethod
+    def ckpt_id(path_key: str, step: int) -> str:
+        return f"{path_key}@{step}"
+
+    # --------------------------------------------------------------- put
+    def put(self, path_key: str, step: int, tree: Any) -> str:
+        cid = self.ckpt_id(path_key, step)
+        self.puts += 1
+        if cid in self._mem or (self.directory and os.path.exists(self._path(cid))):
+            return cid  # content already produced by a sibling — dedup
+        if self.directory:
+            self._write_disk(cid, tree)
+        else:
+            self._mem[cid] = tree
+        return cid
+
+    # --------------------------------------------------------------- get
+    def get(self, cid: str) -> Any:
+        self.gets += 1
+        if cid in self._mem:
+            self.hits += 1
+            return self._mem[cid]
+        if self.directory:
+            p = self._path(cid)
+            if os.path.exists(p):
+                self.hits += 1
+                return self._read_disk(cid)
+        raise KeyError(f"checkpoint {cid!r} not in store")
+
+    def contains(self, cid: str) -> bool:
+        return cid in self._mem or (
+            self.directory is not None and os.path.exists(self._path(cid)))
+
+    # ------------------------------------------------------------- evict
+    def evict(self, cid: str) -> bool:
+        if cid in self._mem:
+            del self._mem[cid]
+            return True
+        if self.directory:
+            p = self._path(cid)
+            if os.path.exists(p):
+                os.remove(p)
+                return True
+        return False
+
+    def __len__(self) -> int:
+        n = len(self._mem)
+        if self.directory:
+            n += sum(1 for f in os.listdir(self.directory) if f.endswith(".ckpt"))
+        return n
+
+    # ---------------------------------------------------------- disk I/O
+    def _path(self, cid: str) -> str:
+        safe = cid.replace("/", "_")
+        return os.path.join(self.directory, safe + ".ckpt")
+
+    def _write_disk(self, cid: str, tree: Any) -> None:
+        leaves, treedef = _tree_flatten(tree)
+        buf = io.BytesIO()
+        arrs = {f"leaf{i}": np.asarray(x) for i, x in enumerate(leaves)}
+        np.savez(buf, **arrs)
+        payload = buf.getvalue()
+        meta = json.dumps({"treedef": str(treedef), "n": len(leaves)})
+        with open(self._path(cid), "wb") as f:
+            header = meta.encode("utf-8")
+            f.write(len(header).to_bytes(8, "little"))
+            f.write(header)
+            f.write(payload)
+        # treedef structure is re-derivable only with the original aux data;
+        # store a pickled treedef alongside for exact reconstruction.
+        import pickle
+        with open(self._path(cid) + ".tree", "wb") as f:
+            pickle.dump(treedef, f)
+        self.bytes_written += len(payload)
+
+    def _read_disk(self, cid: str) -> Any:
+        import pickle
+        with open(self._path(cid), "rb") as f:
+            hlen = int.from_bytes(f.read(8), "little")
+            f.read(hlen)  # meta (informational)
+            payload = f.read()
+        with open(self._path(cid) + ".tree", "rb") as f:
+            treedef = pickle.load(f)
+        with np.load(io.BytesIO(payload)) as z:
+            leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+        return jax.tree_util.tree_unflatten(treedef, leaves)

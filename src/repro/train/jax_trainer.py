@@ -1,0 +1,123 @@
+"""Real-training backend: Hippo stages driving a JAX model (the §5.2
+``Trainer`` counterpart).
+
+``JaxTrainer`` executes a stage by stepping the jitted update once per
+training step, feeding each step its hyper-parameter values from the
+stage's descriptor (the ``setup(hp)`` hot-update of Figure 9 becomes
+"hp values are traced scalar inputs of the compiled step").  Everything a
+resumed trial needs is in the state pytree:
+
+    {"params", "opt", "data" (pipeline position), "step"}
+
+so stage-based execution is *lossless*: training a prefix once and forking
+the checkpoint yields bit-identical parameters to training each trial
+straight through (asserted by ``tests/test_lossless.py``).
+
+Batch-size sequences change the batch *shape* → new jit cache entry; the
+compiled-executable cache makes revisiting a size free (DESIGN.md §3(b)).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trainer import StageContext, TrainerBackend
+from repro.core.values import desc_static, desc_values
+from repro.data.pipeline import DataPipeline
+from repro.train.optimizer import apply_update, init_opt_state
+
+__all__ = ["JaxTrainer"]
+
+
+class JaxTrainer(TrainerBackend):
+    """Stage executor over any task exposing ``init(rng)`` and
+    ``loss(params, batch) -> (scalar, metrics)``."""
+
+    def __init__(self, task, pipeline_factory: Callable[[], DataPipeline],
+                 eval_batch: Dict[str, np.ndarray],
+                 default_optimizer: str = "momentum", seed: int = 0,
+                 objective_from: str = "acc"):
+        self.task = task
+        self.pipeline_factory = pipeline_factory
+        self.eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+        self.default_optimizer = default_optimizer
+        self.seed = seed
+        self.objective_from = objective_from
+        self._step_fns: Dict[Tuple, Any] = {}
+        self._eval_fn = jax.jit(self.task.loss)
+
+    # ------------------------------------------------------------------ state
+    def init_state(self) -> Dict[str, Any]:
+        params = self.task.init(jax.random.PRNGKey(self.seed))
+        pipe = self.pipeline_factory()
+        return {
+            "params": params,
+            "opt": None,               # lazy: optimizer choice is a static hp
+            "opt_name": None,
+            "data": pipe.state(),
+            "step": 0,
+        }
+
+    # ------------------------------------------------------------- step fn
+    def _jitted_step(self, opt_name: str):
+        key = ("step", opt_name)
+        if key not in self._step_fns:
+            def step_fn(params, opt, batch, hp, step):
+                (loss, _), grads = jax.value_and_grad(
+                    self.task.loss, has_aux=True)(params, batch)
+                params, opt = apply_update(opt_name, params, grads, opt,
+                                           hp, step)
+                return params, opt, loss
+            self._step_fns[key] = jax.jit(step_fn)
+        return self._step_fns[key]
+
+    # -------------------------------------------------------------- execute
+    def run_stage(self, state: Dict[str, Any], ctx: StageContext
+                  ) -> Dict[str, Any]:
+        assert state["step"] == ctx.start, (state["step"], ctx.start)
+        vals = desc_values(ctx.desc, ctx.node_start, ctx.start, ctx.stop)
+        static = desc_static(ctx.desc)
+        opt_name = static.get("optimizer", self.default_optimizer)
+
+        params = state["params"]
+        opt = state["opt"]
+        if opt is None or state["opt_name"] != opt_name:
+            opt = init_opt_state(opt_name, params)
+
+        pipe = self.pipeline_factory()
+        pipe.restore(state["data"])
+
+        static_hp = {k: float(v) for k, v in static.items()
+                     if isinstance(v, (int, float)) and not k.startswith("_")}
+        step_fn = self._jitted_step(opt_name)
+
+        names = [k for k in vals if k != "bs"]
+        for i, step in enumerate(range(ctx.start, ctx.stop)):
+            if "bs" in vals:
+                pipe.set_batch_size(int(round(vals["bs"][i])))
+            batch = pipe.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            hp = dict(static_hp)
+            hp.update({k: vals[k][i] for k in names})
+            params, opt, _ = step_fn(params, opt, batch, hp,
+                                     jnp.int32(step))
+
+        return {"params": params, "opt": opt, "opt_name": opt_name,
+                "data": pipe.state(), "step": ctx.stop}
+
+    # ------------------------------------------------------------- evaluate
+    def evaluate(self, state: Dict[str, Any], ctx: StageContext
+                 ) -> Dict[str, float]:
+        loss, metrics = self._eval_fn(state["params"], self.eval_batch)
+        out = {"loss": float(loss)}
+        out["val_acc"] = float(metrics.get(self.objective_from, -loss))
+        for k, v in metrics.items():
+            out[k] = float(v)
+        return out
+
+    def stage_seconds(self, ctx: StageContext) -> Optional[float]:
+        return None  # wall-clock measured by the engine

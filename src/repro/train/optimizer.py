@@ -1,0 +1,80 @@
+"""Hyper-parameter-sequence-aware optimizers (SGD/momentum, Adam, AdamW).
+
+Hippo's whole premise is that training knobs are *functions of the step*,
+so every knob here (lr, momentum, weight decay) enters the update as a
+**traced scalar argument** rather than a compile-time constant: one
+compiled train step serves every stage of every trial regardless of its
+hyper-parameter values — only *shape* changes (batch size) recompile.
+
+The optimizer choice itself is a static hyper-parameter (paper Table 2
+tunes {Adam, vanilla SGD, SGD+momentum}); switching optimizers mid-trial
+would change the state pytree and is not part of the paper's search spaces.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_opt_state", "apply_update", "OPTIMIZERS"]
+
+OPTIMIZERS = ("sgd", "momentum", "adam", "adamw")
+
+
+def init_opt_state(name: str, params: Any) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    if name == "sgd":
+        return {}
+    if name == "momentum":
+        return {"m": zeros()}
+    if name in ("adam", "adamw"):
+        return {"m": zeros(), "v": zeros()}
+    raise ValueError(f"unknown optimizer {name!r}; choose from {OPTIMIZERS}")
+
+
+def apply_update(name: str, params: Any, grads: Any, state: Dict[str, Any],
+                 hp: Dict[str, jnp.ndarray], step: jnp.ndarray
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    """One optimizer update.  ``hp`` supplies traced scalars:
+    lr (required), momentum (default .9), wd (default 0), b1/b2/eps."""
+    lr = hp["lr"]
+    wd = hp.get("wd", 0.0)
+
+    if name == "sgd":
+        new = jax.tree.map(
+            lambda p, g: (p - lr * (g + wd * p)).astype(p.dtype), params, grads)
+        return new, state
+
+    if name == "momentum":
+        mom = hp.get("momentum", 0.9)
+        m = jax.tree.map(lambda m_, g: mom * m_ + g, state["m"], grads)
+        new = jax.tree.map(
+            lambda p, m_: (p - lr * (m_ + wd * p)).astype(p.dtype), params, m)
+        return new, {"m": m}
+
+    if name in ("adam", "adamw"):
+        b1 = hp.get("b1", 0.9)
+        b2 = hp.get("b2", 0.999)
+        eps = hp.get("eps", 1e-8)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        if name == "adamw":
+            new = jax.tree.map(
+                lambda p, m_, v_: (p - lr * (m_ / (jnp.sqrt(v_) + eps)
+                                             + wd * p)).astype(p.dtype),
+                params, mh, vh)
+        else:  # adam: wd folded into the gradient (L2), paper-era behaviour
+            new = jax.tree.map(
+                lambda p, m_, v_: (p - lr * m_ / (jnp.sqrt(v_) + eps)
+                                   - lr * wd * p).astype(p.dtype),
+                params, mh, vh)
+        return new, {"m": m, "v": v}
+
+    raise ValueError(name)

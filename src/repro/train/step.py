@@ -1,0 +1,75 @@
+"""Canonical jitted step functions (train / prefill / serve) with sharding.
+
+Used by the multi-pod dry-run and the launcher.  The train step is the
+full production update: loss (with MoE aux), grads, AdamW update — all
+hyper-parameters as traced scalars (the Hippo requirement), parameters and
+optimizer state sharded per :mod:`repro.dist.sharding`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (ShardingRules, batch_specs, cache_specs,
+                                 param_specs)
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.train.optimizer import apply_update, init_opt_state
+
+__all__ = ["build_train_step", "build_prefill_step", "build_serve_step",
+           "shardings_for"]
+
+
+def shardings_for(mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _constrain_seq(x, rules: ShardingRules):
+    """Sequence-parallel constraint on the residual stream (variant knob)."""
+    if rules.seq is None:
+        return x
+    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    return jax.lax.with_sharding_constraint(
+        x, P(dp, rules.seq, None))
+
+
+def build_train_step(model: LM, optimizer: str = "adamw"):
+    """(params, opt, batch, step) → (params, opt, loss).  hp scalars are
+    closed over as traced defaults — lr enters as an argument so one
+    executable serves every stage."""
+
+    def train_step(params, opt, batch, lr, step):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        hp = {"lr": lr, "wd": 0.1, "b1": 0.9, "b2": 0.95}
+        params, opt = apply_update(optimizer, params, grads, opt, hp, step)
+        return params, opt, loss
+
+    return train_step
+
+
+def build_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        # serving returns only the last-position logits (next-token)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def build_serve_step(model: LM):
+    def serve_step(params, cache, tokens, index):
+        logits, cache = model.decode_step(params, cache, tokens, index)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

@@ -1,0 +1,6 @@
+"""Shared utilities: stable hashing, id generation, simple logging."""
+
+from repro.utils.hashing import stable_hash, short_hash
+from repro.utils.ids import IdGen
+
+__all__ = ["stable_hash", "short_hash", "IdGen"]

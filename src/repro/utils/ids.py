@@ -1,0 +1,16 @@
+"""Deterministic id generation (no wall-clock / randomness: journal-safe)."""
+
+from __future__ import annotations
+
+import itertools
+
+
+class IdGen:
+    """Monotonic id generator with a string prefix, e.g. ``stage-17``."""
+
+    def __init__(self, prefix: str, start: int = 0):
+        self.prefix = prefix
+        self._counter = itertools.count(start)
+
+    def __call__(self) -> str:
+        return f"{self.prefix}-{next(self._counter)}"

@@ -1,0 +1,150 @@
+"""Unit + property tests for hyper-parameter sequence functions (§2.1)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hpseq import (Constant, Cosine, CosineWarmRestarts, Cyclic,
+                              Exponential, HpConfig, Linear, MultiStep,
+                              Piecewise, Seq, StepLR, Warmup, from_json)
+
+
+# ---------------------------------------------------------------------- unit
+
+def test_constant():
+    f = Constant(0.1)
+    assert f.value(0) == f.value(1000) == 0.1
+    assert f.boundaries(100) == []
+
+
+def test_multistep_values_and_boundaries():
+    f = StepLR(0.1, 0.1, [90, 135])          # paper Table 2 row 1
+    assert f.value(0) == pytest.approx(0.1)
+    assert f.value(89) == pytest.approx(0.1)
+    assert f.value(90) == pytest.approx(0.01)
+    assert f.value(135) == pytest.approx(0.001)
+    assert f.boundaries(200) == [90, 135]
+    assert f.boundaries(100) == [90]
+
+
+def test_multistep_explicit_values():
+    f = MultiStep(128, [40], values=[128, 256])  # Figure 10 batch size
+    assert f.value(39) == 128 and f.value(40) == 256
+
+
+def test_warmup_composition():
+    f = Warmup(5, 0.1, StepLR(0.1, 0.1, [90, 135]))
+    assert f.value(0) == 0.0
+    assert f.value(4) == pytest.approx(0.08)
+    assert f.value(5) == pytest.approx(0.1)      # hand-off to StepLR local 0
+    assert f.value(94) == pytest.approx(0.1)     # StepLR local 89
+    assert f.value(95) == pytest.approx(0.01)    # StepLR local 90
+    assert 5 in f.boundaries(200)
+    assert 95 in f.boundaries(200)
+
+
+def test_exponential_and_cosine():
+    e = Exponential(0.1, 0.95)
+    assert e.value(10) == pytest.approx(0.1 * 0.95 ** 10)
+    c = Cosine(1.0, 100)
+    assert c.value(0) == pytest.approx(1.0)
+    assert c.value(100) == pytest.approx(0.0)
+    assert c.value(50) == pytest.approx(0.5)
+
+
+def test_cosine_warm_restarts_periodicity():
+    f = CosineWarmRestarts(1.0, t_0=20)
+    assert f.value(0) == pytest.approx(f.value(20))
+    assert f.value(5) == pytest.approx(f.value(25))
+    assert f.boundaries(60) == [20, 40]
+
+
+def test_cyclic():
+    f = Cyclic(0.001, 0.1, step_size_up=20)
+    assert f.value(0) == pytest.approx(0.001)
+    assert f.value(20) == pytest.approx(0.1)
+    assert f.value(40) == pytest.approx(0.001)
+
+
+def test_piecewise():
+    f = Piecewise([(0, 0.1), (100, 0.01)])
+    assert f.value(99) == 0.1 and f.value(100) == 0.01
+    assert f.boundaries(200) == [100]
+
+
+# ------------------------------------------------------------------ equality
+
+def test_prefix_equal_constant_vs_multistep():
+    """Figure 1: constant lr and a decayed lr share the pre-decay prefix."""
+    a, b = Constant(0.1), StepLR(0.1, 0.1, [100])
+    assert a.prefix_equal(b, 100)
+    assert not a.prefix_equal(b, 101)
+
+
+def test_prefix_equal_different_milestones():
+    a, b = StepLR(0.1, 0.1, [90, 135]), StepLR(0.1, 0.1, [100, 150])
+    assert a.prefix_equal(b, 90)
+    assert not a.prefix_equal(b, 91)
+
+
+def test_seq_extension_shares_prefix():
+    base = StepLR(0.1, 0.1, [50])
+    ext = Seq((base, 80), (Constant(0.5), None))     # PBT-style exploit
+    assert base.prefix_equal(ext, 80)
+    assert not base.prefix_equal(ext, 81)
+
+
+# ------------------------------------------------------------------ hypothesis
+
+hp_fn = st.one_of(
+    st.builds(Constant, st.floats(0.001, 1.0, allow_nan=False)),
+    st.builds(lambda b, m, g: MultiStep(b, sorted(set(m)), g),
+              st.floats(0.01, 1.0), st.lists(st.integers(1, 200), min_size=1,
+                                             max_size=3),
+              st.floats(0.1, 0.9)),
+    st.builds(Exponential, st.floats(0.01, 1.0), st.floats(0.8, 0.999)),
+    st.builds(Linear, st.floats(0.01, 1.0), st.integers(1, 200)),
+    st.builds(Cosine, st.floats(0.01, 1.0), st.integers(1, 200)),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(hp_fn)
+def test_json_roundtrip(f):
+    g = from_json(f.to_json())
+    assert g == f
+    for s in (0, 1, 7, 50, 199):
+        assert g.value(s) == pytest.approx(f.value(s), nan_ok=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(hp_fn, st.integers(1, 200))
+def test_prefix_equal_reflexive(f, upto):
+    assert f.prefix_equal(f, upto)
+
+
+@settings(max_examples=50, deadline=None)
+@given(hp_fn, hp_fn, st.integers(1, 120))
+def test_prefix_equal_implies_pointwise(f, g, upto):
+    """Soundness: structural prefix equality never lies about values."""
+    if f.prefix_equal(g, upto):
+        for s in range(0, upto, max(1, upto // 20)):
+            assert f.value(s) == pytest.approx(g.value(s))
+
+
+@settings(max_examples=50, deadline=None)
+@given(hp_fn, st.integers(2, 150))
+def test_boundaries_within_range(f, total):
+    for b in f.boundaries(total):
+        assert 0 < b < total
+
+
+def test_hpconfig_prefix_and_hash():
+    c1 = HpConfig({"lr": Constant(0.1)}, {"wd": 1e-4})
+    c2 = HpConfig({"lr": StepLR(0.1, 0.1, [60])}, {"wd": 1e-4})
+    c3 = HpConfig({"lr": Constant(0.1)}, {"wd": 1e-3})
+    assert c1.prefix_equal(c2, 60)
+    assert not c1.prefix_equal(c2, 61)
+    assert not c1.prefix_equal(c3, 1)        # static hp differs → no sharing
+    assert hash(c1) == hash(HpConfig({"lr": Constant(0.1)}, {"wd": 1e-4}))

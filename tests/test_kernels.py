@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_attention, ssd_intra
+from repro.kernels.ref import attention_ref, ssd_intra_ref
+from repro.models.ssm import ssd_chunked, ssd_sequential
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Hq,Hkv,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 128, 8, 2, 64),      # GQA 4:1
+    (1, 256, 8, 1, 32),      # MQA
+    (1, 96, 4, 2, 64),       # ragged (pads to block)
+    (2, 64, 2, 1, 128),      # large head dim
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+def test_flash_attention_matches_ref(B, Sq, Hq, Hkv, hd, causal, window,
+                                     dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sq, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sq, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+
+    g1 = jax.grad(lambda q_: flash_attention(q_, k, v).sum())(q)
+    g2 = jax.grad(lambda q_: attention_ref(q_, k, v).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 2, 16, 2, 16, 16),
+    (2, 3, 32, 4, 16, 24),
+    (1, 1, 64, 1, 32, 32),
+    (1, 4, 8, 8, 8, 8),
+])
+def test_ssd_intra_matches_ref(B, nc, Q, H, P, N, dtype):
+    ks = jax.random.split(KEY, 5)
+    xr = jax.random.normal(ks[0], (B, nc, Q, H, P), dtype)
+    dtr = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+    ltT = -jnp.abs(jax.random.normal(ks[2], (B, nc, H, Q))) * 0.1
+    Br = jax.random.normal(ks[3], (B, nc, Q, N), dtype)
+    Cr = jax.random.normal(ks[4], (B, nc, Q, N), dtype)
+    out = ssd_intra(xr, dtr, ltT, Br, Cr)
+    ref = ssd_intra_ref(xr, dtr, ltT, Br, Cr)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_ssd_chunked_matches_sequential(chunk):
+    """The chunked SSD algorithm == step-by-step recurrence, any chunking."""
+    B, S, H, P, N = 2, 64, 3, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y2, s2 = ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_ssd_chunked_kernel_path_matches_jnp_path():
+    B, S, H, P, N = 1, 64, 2, 16, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y1, _ = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=False)
+    y2, _ = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

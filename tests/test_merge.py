@@ -1,0 +1,64 @@
+"""Merge rates p and q (§6, "Merge rate")."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hpseq import Constant, HpConfig, MultiStep, StepLR
+from repro.core.merge import (k_wise_merge_rate, merge_rate, total_steps,
+                              unique_steps)
+from repro.core.trial import Trial
+
+
+def mk(lr, steps):
+    return Trial(HpConfig({"lr": lr}), steps)
+
+
+def test_identical_trials_merge_rate_is_n():
+    """'if there are N identical trials, the merge rate p is N'."""
+    trials = [mk(Constant(0.1), 100) for _ in range(5)]
+    assert merge_rate(trials) == pytest.approx(5.0)
+
+
+def test_disjoint_trials_merge_rate_is_one():
+    trials = [mk(Constant(0.1), 100), mk(Constant(0.01), 100)]
+    assert merge_rate(trials) == pytest.approx(1.0)
+
+
+def test_partial_prefix():
+    # share [0,100): unique = 100 + 100 + 100 = 300, total = 400
+    trials = [mk(MultiStep(0.1, [100], values=[0.1, 0.05]), 200),
+              mk(MultiStep(0.1, [100], values=[0.1, 0.01]), 200)]
+    assert merge_rate(trials) == pytest.approx(400 / 300)
+
+
+def test_nested_milestone_overlap():
+    a = mk(StepLR(0.1, 0.1, [90, 135]), 200)
+    b = mk(StepLR(0.1, 0.1, [100, 150]), 200)
+    # share [0,90): unique = 100 + (200-90) + (200-100)... compute:
+    # root [0,100) serves both prefixes (split at 90 for a): unique =
+    # 100 (root span) + 110 (a's tail) + 100 (b's tail) = 310
+    assert unique_steps([a, b]) == 310
+    assert total_steps([a, b]) == 400
+
+
+def test_k_wise_merge_rate():
+    s1 = [mk(Constant(0.1), 100), mk(Constant(0.01), 100)]
+    s2 = [mk(Constant(0.1), 100), mk(Constant(0.001), 100)]
+    # jointly: 0.1 shared across studies → unique 300, total 400
+    assert k_wise_merge_rate([s1, s2]) == pytest.approx(400 / 300)
+
+
+lr_strat = st.one_of(
+    st.builds(Constant, st.sampled_from([0.1, 0.05, 0.01])),
+    st.builds(lambda m: StepLR(0.1, 0.1, [m]), st.integers(10, 90)),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.builds(lambda f, n: mk(f, n), lr_strat,
+                          st.integers(10, 150)), min_size=1, max_size=6))
+def test_merge_rate_bounds(trials):
+    """1 ≤ p ≤ n, and unique ≤ total always."""
+    u, t = unique_steps(trials), total_steps(trials)
+    assert 0 < u <= t
+    assert 1.0 <= merge_rate(trials) <= len(trials) + 1e-9

@@ -1,0 +1,67 @@
+"""Critical-path scheduler (§4.3)."""
+
+from repro.core.hpseq import Constant, HpConfig, MultiStep
+from repro.core.scheduler import CriticalPathScheduler
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import build_stage_tree
+from repro.core.trial import Trial
+
+
+def make_plan():
+    plan = SearchPlan()
+    # shared prefix [0,100); branches of length 100 and 300
+    short = Trial(HpConfig({"lr": MultiStep(0.1, [100], values=[0.1, 0.05])}), 200)
+    long = Trial(HpConfig({"lr": MultiStep(0.1, [100], values=[0.1, 0.01])}), 400)
+    plan.submit(short)
+    plan.submit(long)
+    return plan
+
+
+def test_critical_path_takes_longest_branch_first():
+    plan = make_plan()
+    tree = build_stage_tree(plan)
+    sched = CriticalPathScheduler()
+    taken = set()
+    path1 = sched.next_path(plan, tree, taken)
+    # first chain = root + the 300-step branch (the critical path)
+    assert sum(s.steps for s in path1) == 400
+    path2 = sched.next_path(plan, tree, taken)
+    assert sum(s.steps for s in path2) == 100  # remaining short branch
+    assert sched.next_path(plan, tree, taken) is None
+
+
+def test_chains_are_parent_connected():
+    plan = make_plan()
+    tree = build_stage_tree(plan)
+    sched = CriticalPathScheduler()
+    for path in sched.assign(plan, tree, 4):
+        for prev, cur in zip(path, path[1:]):
+            assert cur.parent == prev.stage_id
+
+
+def test_profile_weighting_changes_critical_path():
+    plan = SearchPlan()
+    a = Trial(HpConfig({"lr": MultiStep(0.1, [100], values=[0.1, 0.05])}), 200)
+    b = Trial(HpConfig({"lr": MultiStep(0.1, [100], values=[0.1, 0.01])}), 150)
+    na, _, _ = plan.submit(a)
+    nb, _, _ = plan.submit(b)
+    # b's branch is shorter in steps but 10× slower per step
+    plan.record_profile(nb.node_id, 10.0)
+    tree = build_stage_tree(plan)
+    sched = CriticalPathScheduler()
+    path1 = sched.next_path(plan, tree, set())
+    leaf = path1[-1]
+    assert leaf.node_id == nb.node_id          # time-weighted critical path
+
+
+def test_assign_disjoint():
+    plan = make_plan()
+    tree = build_stage_tree(plan)
+    sched = CriticalPathScheduler()
+    paths = sched.assign(plan, tree, 8)
+    seen = set()
+    for p in paths:
+        for s in p:
+            assert s.stage_id not in seen
+            seen.add(s.stage_id)
+    assert seen == set(tree.stages)            # full coverage

@@ -1,0 +1,115 @@
+"""Search plan (§3.2): prefix merging, stage splits, request handling."""
+
+import pytest
+
+from repro.core.hpseq import Constant, HpConfig, MultiStep, StepLR
+from repro.core.searchplan import Request, SearchPlan
+from repro.core.trial import Trial
+
+
+def mk(lr, steps, **static):
+    return Trial(HpConfig({"lr": lr}, static or None), steps)
+
+
+def test_figure3_merging():
+    """The paper's Figure 3/4 study: four trials sharing lr=0.1 prefixes."""
+    plan = SearchPlan()
+    t1 = mk(MultiStep(0.1, [200], values=[0.1, 0.01]), 300)
+    t2 = mk(MultiStep(0.1, [100, 200], values=[0.1, 0.05, 0.02]), 300)
+    t3 = mk(MultiStep(0.1, [100], values=[0.1, 0.05]), 300)
+    t4 = mk(MultiStep(0.1, [100, 200], values=[0.1, 0.02, 0.01]), 300)
+    for t in (t1, t2, t3, t4):
+        plan.submit(t)
+    # one shared root holding lr=0.1 (stage A1 of Figure 4)
+    roots = plan.children[None]
+    assert len(roots) == 1
+    root = plan.nodes[roots[0]]
+    assert root.trials == {t1.trial_id, t2.trial_id, t3.trial_id, t4.trial_id}
+    # t2 and t3 share the lr=0.05 @100 node (stage B1)
+    kids = {plan.nodes[c].desc["hps"]["lr"]["value"]: plan.nodes[c]
+            for c in plan.children[root.node_id]}
+    assert set(kids) == {0.05, 0.02, 0.01}
+    assert kids[0.05].trials == {t2.trial_id, t3.trial_id}
+
+
+def test_trial5_split_adds_request_not_node_removal():
+    """Figure 5: a trial with a boundary at 150 reuses the @100 node — the
+    split is a new *request*, not a tree rewrite."""
+    plan = SearchPlan()
+    t1 = mk(MultiStep(0.1, [200], values=[0.1, 0.01]), 300)
+    plan.submit(t1)
+    n_nodes = len(plan.nodes)
+    t5 = mk(MultiStep(0.1, [150], values=[0.1, 0.02]), 300)
+    node5, step5, sat = plan.submit(t5)
+    # the shared lr=0.1 root gained no replacement; one new leaf for 0.02@150
+    assert len(plan.nodes) == n_nodes + 1
+    root = plan.nodes[plan.children[None][0]]
+    assert t5.trial_id in root.trials
+
+
+def test_submit_returns_satisfied_when_metrics_exist():
+    plan = SearchPlan()
+    t = mk(Constant(0.1), 100)
+    node, step, sat = plan.submit(t)
+    assert not sat and step == 100
+    plan.record_result(node.node_id, 100, "ckpt-x", {"val_acc": 0.9})
+    t_same = mk(Constant(0.1), 100)
+    node2, step2, sat2 = plan.submit(t_same)
+    assert sat2 and node2.node_id == node.node_id
+    assert plan.metrics_for(node.node_id, 100) == {"val_acc": 0.9}
+
+
+def test_pending_excludes_running_and_done():
+    plan = SearchPlan()
+    t = mk(Constant(0.1), 100)
+    node, _, _ = plan.submit(t)
+    assert plan.pending_requests() == [Request(node.node_id, 100)]
+    plan.mark_running([Request(node.node_id, 100)])
+    assert plan.pending_requests() == []
+    plan.record_result(node.node_id, 100, "c", {"m": 1.0})
+    assert plan.pending_requests() == []
+
+
+def test_static_hp_prevents_merge():
+    plan = SearchPlan()
+    plan.submit(mk(Constant(0.1), 100, wd=1e-4))
+    plan.submit(mk(Constant(0.1), 100, wd=1e-3))
+    assert len(plan.children[None]) == 2       # no shared prefix
+
+
+def test_path_key_identifies_value_trajectory():
+    plan = SearchPlan()
+    a = mk(Constant(0.1), 100)
+    b = mk(StepLR(0.1, 0.1, [100]), 200)       # same values on [0,100)
+    na, _, _ = plan.submit(a)
+    nb, _, _ = plan.submit(b)
+    # both route through the same root → same path prefix
+    assert plan.path_to_root(nb.node_id)[0].node_id == na.node_id
+
+
+def test_release_trial_refcounts():
+    plan = SearchPlan()
+    a = mk(Constant(0.1), 100)
+    b = mk(StepLR(0.1, 0.1, [100]), 200)
+    na, _, _ = plan.submit(a)
+    plan.submit(b)
+    dead = plan.release_trial(a.trial_id)
+    assert dead == []                          # root still referenced by b
+    dead = plan.release_trial(b.trial_id)
+    assert len(dead) >= 1                      # now everything is orphaned
+
+
+def test_json_roundtrip():
+    plan = SearchPlan("k")
+    t = mk(StepLR(0.1, 0.1, [60]), 120)
+    node, _, _ = plan.submit(t)
+    plan.record_result(node.node_id, 120, "ck", {"val_acc": 0.5})
+    plan.record_profile(node.node_id, 0.25)
+    plan2 = SearchPlan.from_json(plan.to_json())
+    assert set(plan2.nodes) == set(plan.nodes)
+    n2 = plan2.nodes[node.node_id]
+    assert n2.ckpts == {120: "ck"}
+    assert n2.metrics[120] == {"val_acc": 0.5}
+    # resubmitting the same trial into the restored plan dedups
+    node3, _, sat = plan2.submit(mk(StepLR(0.1, 0.1, [60]), 120))
+    assert sat

@@ -1,0 +1,94 @@
+"""Sharding rules: every arch's full-size param tree gets valid, divisible
+specs on the production meshes (no device allocation — eval_shape only)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, config_for_shape, get_config, list_archs
+from repro.dist.sharding import (MESH_SIZES, ShardingRules, _axis_size,
+                                 batch_specs, cache_specs, param_specs)
+from repro.launch.specs import batch_struct
+from repro.models import LM
+
+
+def _check_divisible(shapes, specs):
+    def chk(leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            assert dim % _axis_size(ax, MESH_SIZES) == 0, (leaf.shape, spec)
+    jax.tree.map(chk, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    rules = ShardingRules.for_mesh(multi_pod)
+    shapes = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, rules)
+    _check_divisible(shapes, specs)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_weight_matrices_are_sharded(arch):
+    """The big tensors must not silently fall back to replication."""
+    cfg = get_config(arch)
+    rules = ShardingRules.for_mesh(False)
+    shapes = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, rules)
+    leaves = list(zip(jax.tree.leaves(shapes),
+                      jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))))
+    big = [(l, s) for l, s in leaves if l.size >= 1_000_000]
+    assert big
+    for leaf, spec in big:
+        n_axes = sum(1 for a in spec if a is not None)
+        assert n_axes >= 1, (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k"])
+def test_batch_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = ShardingRules.for_mesh(True)
+    batch = batch_struct(cfg, shape.global_batch, shape.seq_len)
+    specs = batch_specs(cfg, batch, rules)
+    _check_divisible(batch, specs)
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "mamba2-2.7b",
+                                  "recurrentgemma-2b", "grok-1-314b"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    shape = SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    rules = ShardingRules.for_mesh(False)
+    model = LM(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    specs = cache_specs(cfg, cache, rules, shape.global_batch)
+    _check_divisible(cache, specs)
+
+
+def test_expert_parallel_only_on_multipod():
+    cfg = get_config("grok-1-314b")
+    shapes = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+    sp_single = param_specs(shapes, ShardingRules.for_mesh(False))
+    sp_multi = param_specs(shapes, ShardingRules.for_mesh(True))
+    wi_single = sp_single["cycles"][0]["ffn"]["wi"]
+    wi_multi = sp_multi["cycles"][0]["ffn"]["wi"]
+    assert wi_single[1] is None                     # expert dim unsharded
+    assert wi_multi[1] == "pod"                     # expert-parallel over pod
+
+
+def test_vocab_not_sharded_when_indivisible():
+    cfg = get_config("mamba2-2.7b")                 # vocab 50280 % 16 != 0
+    shapes = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, ShardingRules.for_mesh(False))
+    assert specs["embed"][0] is None
+    assert specs["embed"][1] == "data"              # d_model still FSDP

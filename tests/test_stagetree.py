@@ -1,0 +1,104 @@
+"""Stage-tree generation — Algorithm 1 (§3)."""
+
+from repro.core.hpseq import Constant, HpConfig, MultiStep
+from repro.core.searchplan import Request, SearchPlan
+from repro.core.stagetree import build_stage_tree
+from repro.core.trial import Trial
+
+
+def mk(lr, steps):
+    return Trial(HpConfig({"lr": lr}), steps)
+
+
+def submit_all(plan, *trials):
+    return [plan.submit(t) for t in trials]
+
+
+def test_single_trial_single_stage():
+    plan = SearchPlan()
+    plan.submit(mk(Constant(0.1), 100))
+    tree = build_stage_tree(plan)
+    assert len(tree) == 1
+    (st,) = tree.stages.values()
+    assert (st.start, st.stop, st.report) == (0, 100, True)
+    assert st.resume is None and st.parent is None
+
+
+def test_shared_prefix_emits_split_stages():
+    """Constant(0.1)@100 and MultiStep(0.1→0.01@100)@200 share [0,100)."""
+    plan = SearchPlan()
+    a = mk(Constant(0.1), 100)
+    b = mk(MultiStep(0.1, [100], values=[0.1, 0.01]), 200)
+    submit_all(plan, a, b)
+    tree = build_stage_tree(plan)
+    # stages: root[0→100] (report for a), child 0.01 [100→200] (report for b)
+    assert len(tree) == 2
+    stages = sorted(tree.stages.values(), key=lambda s: s.start)
+    assert (stages[0].start, stages[0].stop, stages[0].report) == (0, 100, True)
+    assert (stages[1].start, stages[1].stop, stages[1].report) == (100, 200, True)
+    assert stages[1].parent == stages[0].stage_id
+    assert tree.total_steps() == 200           # zero redundancy
+
+
+def test_resume_from_checkpoint():
+    plan = SearchPlan()
+    t = mk(Constant(0.1), 200)
+    node, _, _ = plan.submit(t)
+    plan.record_result(node.node_id, 120, "ck120", None)   # mid checkpoint
+    tree = build_stage_tree(plan)
+    (st,) = tree.stages.values()
+    assert st.resume == (node.node_id, 120)
+    assert (st.start, st.stop) == (120, 200)
+
+
+def test_defer_when_running():
+    plan = SearchPlan()
+    t = mk(Constant(0.1), 100)
+    node, _, _ = plan.submit(t)
+    plan.mark_running([Request(node.node_id, 100)])
+    # a second request at a shorter step on the same (running) node
+    t2 = mk(Constant(0.1), 50)
+    plan.submit(t2)
+    tree = build_stage_tree(plan)
+    assert len(tree) == 0                      # deferred, Algorithm 1 line 15
+
+
+def test_eval_only_stage_when_ckpt_exists_but_no_metrics():
+    plan = SearchPlan()
+    t = mk(Constant(0.1), 100)
+    node, _, _ = plan.submit(t)
+    plan.record_result(node.node_id, 100, "ck100", None)   # ckpt, no metrics
+    tree = build_stage_tree(plan)
+    (st,) = tree.stages.values()
+    assert st.steps == 0 and st.report
+    assert st.resume == (node.node_id, 100)
+
+
+def test_deep_chain_resumes_nearest_ancestor_ckpt():
+    """FindLatestCheckpoint recursion across three nodes (Figure 6/7)."""
+    plan = SearchPlan()
+    t = mk(MultiStep(0.1, [20, 40], values=[0.1, 0.05, 0.01]), 60)
+    leaf, _, _ = plan.submit(t)
+    path = plan.path_to_root(leaf.node_id)
+    assert len(path) == 3
+    plan.record_result(path[0].node_id, 10, "ck10", None)  # ckpt in root
+    tree = build_stage_tree(plan)
+    stages = sorted(tree.stages.values(), key=lambda s: s.start)
+    assert stages[0].resume == (path[0].node_id, 10)
+    assert [s.start for s in stages] == [10, 20, 40]
+    assert stages[-1].report
+    # chain: each later stage parented on the previous
+    assert stages[1].parent == stages[0].stage_id
+    assert stages[2].parent == stages[1].stage_id
+
+
+def test_multiple_requests_same_node_cut_stages():
+    plan = SearchPlan()
+    a = mk(Constant(0.1), 50)
+    b = mk(Constant(0.1), 100)
+    submit_all(plan, a, b)
+    tree = build_stage_tree(plan)
+    stages = sorted(tree.stages.values(), key=lambda s: s.start)
+    assert [(s.start, s.stop, s.report) for s in stages] == [
+        (0, 50, True), (50, 100, True)]
+    assert tree.total_steps() == 100
