@@ -1,12 +1,21 @@
 """Benchmark harness entry point: one section per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run`` runs everything and prints CSV
-blocks; individual benches are importable modules with ``main()``.
+blocks; individual benches are importable modules with ``main()``.  The
+control-plane rows are also written to ``BENCH_stagetree.json`` so the perf
+trajectory is tracked across PRs (CI uploads it as an artifact).
 """
 
 from __future__ import annotations
 
+import json
 import sys
+
+
+def dump_stagetree_json(rows, path: str = "BENCH_stagetree.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "stagetree", "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
 
 
 def main() -> None:
@@ -26,7 +35,9 @@ def main() -> None:
     for title, mod in sections:
         print(f"\n## {title}")
         sys.stdout.flush()
-        mod.main()
+        rows = mod.main()
+        if mod is bench_stagetree:
+            dump_stagetree_json(rows)
 
 
 if __name__ == "__main__":

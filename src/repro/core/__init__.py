@@ -6,9 +6,13 @@ from repro.core.hpseq import (
 )
 from repro.core.trial import Trial
 from repro.core.searchplan import SearchPlan
-from repro.core.stagetree import build_stage_tree
-from repro.core.scheduler import CriticalPathScheduler
-from repro.core.engine import ExecutionEngine, Tuner
+from repro.core.stagetree import (StageTreeBuilder, build_stage_tree,
+                                  stage_trees_equal)
+from repro.core.scheduler import (POLICIES, CriticalPathScheduler,
+                                  FIFOScheduler, FairShareScheduler,
+                                  SchedulingPolicy, WeightedFanoutScheduler,
+                                  make_policy)
+from repro.core.engine import EngineStats, ExecutionEngine, Tuner
 from repro.core.trainer import SimulatedTrainer, StageContext, TrainerBackend
 from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps
 from repro.core.db import SearchPlanDB, study_key

@@ -1,0 +1,22 @@
+"""Event-driven execution engine package.
+
+Layout (the former 326-line ``core/engine.py`` monolith, split):
+
+* :mod:`~repro.core.engine.events`     — event heap + virtual clock,
+* :mod:`~repro.core.engine.dispatch`   — scheduling rounds, chain
+  assignment/truncation, worker-side execution,
+* :mod:`~repro.core.engine.aggregator` — result recording, waiter wakeup,
+  checkpoint GC,
+* :mod:`~repro.core.engine.engine`     — the public :class:`ExecutionEngine`
+  facade (API-compatible with the old module: same constructor, ``run()``,
+  ``handle()``).
+"""
+
+from repro.core.engine.engine import (EngineStats, ExecutionEngine,
+                                      StudyHandle, Tuner)
+from repro.core.engine.events import Event, EventLoop
+from repro.core.engine.dispatch import Dispatcher, Worker
+from repro.core.engine.aggregator import Aggregator
+
+__all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats",
+           "Event", "EventLoop", "Dispatcher", "Worker", "Aggregator"]

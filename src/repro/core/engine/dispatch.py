@@ -1,0 +1,150 @@
+"""Chain dispatch — scheduling rounds and worker-side chain execution.
+
+Each round the dispatcher asks the :class:`~repro.core.stagetree.StageTreeBuilder`
+for the current stage tree (incrementally maintained — O(changed requests),
+not O(plan)), hands it to the scheduling policy, and executes the extracted
+chains on idle virtual workers: load the resume checkpoint (or chain off a
+state produced earlier in the same round), run each stage through the
+trainer backend, checkpoint at every stage boundary, and post a ``stage``
+event at the virtual completion time for the aggregator.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.scheduler import SchedulingPolicy
+from repro.core.searchplan import Request, SearchPlan
+from repro.core.stagetree import Stage, StageTreeBuilder
+from repro.core.engine.events import EventLoop
+from repro.core.trainer import StageContext, TrainerBackend
+from repro.train.checkpoint import CheckpointStore
+
+__all__ = ["Worker", "Dispatcher"]
+
+
+@dataclass
+class Worker:
+    wid: int
+    busy_until: float = 0.0
+    idle: bool = True
+
+
+class Dispatcher:
+    def __init__(self, plan: SearchPlan, backend: TrainerBackend,
+                 scheduler: SchedulingPolicy, store: CheckpointStore,
+                 events: EventLoop, stats, workers: List[Worker],
+                 gpus_per_worker: int = 1,
+                 max_steps_per_chain: Optional[int] = None,
+                 builder: Optional[StageTreeBuilder] = None):
+        self.plan = plan
+        self.backend = backend
+        self.scheduler = scheduler
+        self.store = store
+        self.events = events
+        self.stats = stats
+        self.workers = workers
+        self.gpus_per_worker = gpus_per_worker
+        self.max_steps_per_chain = max_steps_per_chain
+        self.builder = builder or StageTreeBuilder(plan)
+
+    # ------------------------------------------------------------ scheduling
+    def assign(self) -> None:
+        idle = [w for w in self.workers if w.idle]
+        if not idle:
+            return
+        tree = self.builder.build()
+        if not tree.stages:
+            return
+        self.stats.rounds += 1
+        paths = self.scheduler.assign(self.plan, tree, len(idle))
+        # stage_id -> (state, finish_time) for cross-chain chaining this round
+        produced: Dict[str, Tuple[Any, float]] = {}
+        for path, worker in zip(paths, idle):
+            if self.max_steps_per_chain:
+                full = path
+                path = self._truncate(full)
+                if len(path) < len(full):
+                    # refund the cut tail: it reschedules in a later round
+                    self.scheduler.on_stages_unassigned(
+                        self.plan, full[len(path):])
+            self._execute_chain(path, worker, produced)
+
+    def _truncate(self, path: List[Stage]) -> List[Stage]:
+        out, steps = [], 0
+        for st in path:
+            out.append(st)
+            steps += st.steps
+            if steps >= self.max_steps_per_chain:
+                break
+        return out
+
+    def _execute_chain(self, path: List[Stage], worker: Worker,
+                       produced: Dict[str, Tuple[Any, float]]) -> None:
+        head = path[0]
+        t = max(self.events.time, worker.busy_until)
+        load_s, save_s = self.backend.overheads()
+
+        # ------- input state
+        if head.resume is not None:
+            nid, step = head.resume
+            cid = self.plan.node(nid).ckpts[step]
+            state = self.store.get(cid)
+            t += load_s
+            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.ckpt_loads += 1
+        elif head.parent is not None:
+            if head.parent not in produced:
+                # parent chain was truncated before producing our input —
+                # leave the requests pending; a later round reschedules them
+                worker.idle = True
+                self.stats.chains_deferred += 1
+                self.scheduler.on_stages_unassigned(self.plan, path)
+                return
+            # produced by another chain in this same round
+            state, parent_done = produced[head.parent]
+            t = max(t, parent_done) + load_s
+            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.ckpt_loads += 1
+        else:
+            state = self.backend.init_state()
+
+        worker.idle = False
+        for st in path:
+            node = self.plan.node(st.node_id)
+            ctx = StageContext(
+                node_id=st.node_id, desc=node.desc, node_start=node.start,
+                start=st.start, stop=st.stop,
+                path_key=self.plan.path_key(st.node_id))
+            self.plan.mark_running([Request(st.node_id, st.stop)])
+
+            wall0 = _time.perf_counter()
+            if st.steps > 0:
+                state = self.backend.run_stage(state, ctx)
+            metrics = self.backend.evaluate(state, ctx) if st.report else None
+            wall = _time.perf_counter() - wall0
+
+            sim = self.backend.stage_seconds(ctx)
+            dur = sim if sim is not None else wall
+            if st.report:
+                dur += getattr(self.backend, "eval_seconds", 0.0)
+                self.stats.evals_run += 1
+            dur += save_s  # checkpoint at every stage boundary
+            self.stats.ckpt_saves += 1
+            t += dur
+            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.stages_run += 1
+            self.stats.steps_run += st.steps
+
+            if st.steps > 0:
+                self.plan.record_profile(
+                    st.node_id, (sim if sim is not None else wall) / st.steps)
+            cid = self.store.put(ctx.path_key, st.stop, state)
+            produced[st.stage_id] = (state, t)
+            self.events.push(t, "stage", {
+                "node_id": st.node_id, "stop": st.stop, "cid": cid,
+                "metrics": metrics, "worker": worker.wid,
+                "last": st is path[-1]})
+        worker.busy_until = t

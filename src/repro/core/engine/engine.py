@@ -1,0 +1,203 @@
+"""Public execution-engine facade — Hippo's scheduler/worker/aggregator loop.
+
+This is the system of §4 run as a deterministic discrete-event simulation
+over ``n_workers`` virtual workers (a *worker* is one GPU server slot in
+the paper; one mesh slice in the TPU mapping).  The facade wires the real
+components and keeps the seed module's public API:
+
+* the **search plan** is the single source of truth (stateless scheduling),
+* every scheduling round obtains a **stage tree** (Algorithm 1) from the
+  incremental :class:`~repro.core.stagetree.StageTreeBuilder` — identical
+  trees to a from-scratch build, O(changed requests) per round — and the
+  scheduling policy extracts whole chains for idle workers
+  (:mod:`repro.core.engine.dispatch`),
+* chains execute through a :class:`~repro.core.trainer.TrainerBackend` —
+  either real JAX training (wall-clock measured) or the analytic simulator
+  (virtual durations) — and deposit checkpoints/metrics through the
+  **aggregator** (:mod:`repro.core.engine.aggregator`) at their virtual
+  completion times,
+* **tuners** observe metrics and submit/kill trials, closing the HPO loop.
+
+Accounting matches the paper's two measurements: ``gpu_seconds`` (sum of
+busy time × GPUs per worker) and ``end-to-end`` time (virtual clock at
+completion), plus ``ckpt_evictions`` for the beyond-paper checkpoint GC.
+
+``share=False`` turns the engine into the **trial-based baseline**
+(Ray Tune / "Hippo-trial"): every submitted trial is salted so its plan
+nodes never merge with other trials' — identical scheduling machinery,
+zero cross-trial reuse.  A trial still reuses *its own* checkpoints when a
+tuner promotes it to a longer step budget, exactly like a paused/resumed
+Ray Tune trial.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core.hpseq import HpConfig
+from repro.core.scheduler import CriticalPathScheduler, SchedulingPolicy
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import StageTreeBuilder
+from repro.core.engine.aggregator import Aggregator
+from repro.core.engine.dispatch import Dispatcher, Worker
+from repro.core.engine.events import EventLoop
+from repro.core.trainer import TrainerBackend
+from repro.core.trial import Trial
+from repro.train.checkpoint import CheckpointStore
+
+__all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats"]
+
+
+class Tuner:
+    """Base class for HPO algorithms (client-library tuners, §5.2)."""
+
+    objective: str = "val_acc"
+    mode: str = "max"  # or "min"
+
+    def start(self, handle: "StudyHandle") -> None:
+        raise NotImplementedError
+
+    def on_result(self, trial: Trial, step: int, metrics: Dict[str, float]) -> None:
+        pass
+
+    def is_done(self) -> bool:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- helpers
+    def score(self, metrics: Dict[str, float]) -> float:
+        v = metrics[self.objective]
+        return v if self.mode == "max" else -v
+
+
+@dataclass
+class StudyHandle:
+    """The submission interface a tuner sees (the client library's view)."""
+
+    engine: "ExecutionEngine"
+    tuner: Tuner
+    study_id: str = "study-0"
+
+    def submit(self, trial: Trial, upto: Optional[int] = None) -> None:
+        self.engine._submit(self, trial, upto)
+
+    def kill(self, trial: Trial) -> None:
+        self.engine._kill(self, trial)
+
+
+@dataclass
+class EngineStats:
+    gpu_seconds: float = 0.0
+    end_to_end: float = 0.0
+    stages_run: int = 0
+    steps_run: int = 0
+    evals_run: int = 0
+    ckpt_loads: int = 0
+    ckpt_saves: int = 0
+    ckpt_evictions: int = 0
+    rounds: int = 0
+    chains_deferred: int = 0  # chains whose in-round input was truncated away
+
+    @property
+    def gpu_hours(self) -> float:
+        return self.gpu_seconds / 3600.0
+
+
+class ExecutionEngine:
+    def __init__(self, plan: SearchPlan, backend: TrainerBackend,
+                 n_workers: int = 4, gpus_per_worker: int = 1,
+                 scheduler: Optional[SchedulingPolicy] = None,
+                 store: Optional[CheckpointStore] = None,
+                 share: bool = True,
+                 max_steps_per_chain: Optional[int] = None):
+        self.plan = plan
+        self.backend = backend
+        self.workers = [Worker(i) for i in range(n_workers)]
+        self.gpus_per_worker = gpus_per_worker
+        self.scheduler = scheduler or CriticalPathScheduler()
+        # NOT `store or ...`: an empty CheckpointStore is falsy (__len__ == 0)
+        # and would be silently replaced, orphaning the caller's store
+        self.store = CheckpointStore() if store is None else store
+        self.share = share
+        self.max_steps_per_chain = max_steps_per_chain
+        self.stats = EngineStats()
+        self.events = EventLoop()
+        self.builder = StageTreeBuilder(plan)
+        self.dispatcher = Dispatcher(
+            plan, backend, self.scheduler, self.store, self.events,
+            self.stats, self.workers, gpus_per_worker=gpus_per_worker,
+            max_steps_per_chain=max_steps_per_chain, builder=self.builder)
+        self.aggregator = Aggregator(plan, self.store, self.stats, self.events)
+        self._trials: Dict[str, Trial] = {}
+        self._handles: List[StudyHandle] = []
+
+    # ------------------------------------------------------------ properties
+    @property
+    def time(self) -> float:
+        """Virtual clock (owned by the event loop)."""
+        return self.events.time
+
+    # ------------------------------------------------------------------ API
+    def handle(self, tuner: Tuner, study_id: str = None) -> StudyHandle:
+        h = StudyHandle(self, tuner, study_id or f"study-{len(self._handles)}")
+        self._handles.append(h)
+        return h
+
+    def run(self, tuners: List[Tuner]) -> EngineStats:
+        """Run tuners to completion; returns accounting stats."""
+        handles = [self.handle(t) for t in tuners]
+        for h in handles:
+            h.tuner.start(h)
+        self._drain()
+        not_done = [h.tuner for h in handles if not h.tuner.is_done()]
+        if not_done:
+            raise RuntimeError(
+                f"engine drained but {len(not_done)} tuner(s) not done — "
+                "a tuner is waiting on a request that was never submitted")
+        self.stats.end_to_end = self.events.time
+        return self.stats
+
+    # ------------------------------------------------------------- internal
+    def _salted(self, trial: Trial, study_id: str) -> Trial:
+        """Trial-based baseline: make the plan treat every (study, trial)
+        pair as unshareable — the salt must include the study id, or two
+        identical studies would still dedup across each other."""
+        if self.share:
+            return trial
+        cfg = trial.hp_config
+        static = dict(cfg.static)
+        static["_trial_salt"] = f"{study_id}/{trial.trial_id}"
+        return Trial(HpConfig(dict(cfg.fns), static), trial.total_steps,
+                     trial_id=trial.trial_id, meta=dict(trial.meta))
+
+    def _submit(self, handle: StudyHandle, trial: Trial,
+                upto: Optional[int]) -> None:
+        trial = self._salted(trial, handle.study_id)
+        self._trials[trial.trial_id] = trial
+        node, step, satisfied = self.plan.submit(trial, upto,
+                                                 study=handle.study_id)
+        if satisfied:
+            # §3.2: results already present → respond immediately (still an
+            # event so tuner callbacks observe a consistent clock).
+            metrics = self.plan.metrics_for(node.node_id, step)
+            self.events.push(self.events.time, "reply",
+                             (handle, trial, step, metrics))
+            return
+        self.aggregator.add_waiter(node.node_id, step, handle, trial)
+
+    def _kill(self, handle: StudyHandle, trial: Trial) -> None:
+        self.aggregator.kill(trial.trial_id)
+
+    # ------------------------------------------------------------ main loop
+    def _drain(self) -> None:
+        self.dispatcher.assign()
+        while self.events:
+            ev = self.events.pop()
+            if ev.kind == "stage":
+                self.aggregator.on_stage_done(ev.payload)
+            elif ev.kind == "reply":
+                handle, trial, step, metrics = ev.payload
+                handle.tuner.on_result(trial, step, metrics)
+            elif ev.kind == "idle":
+                self.workers[ev.payload].idle = True
+            self.dispatcher.assign()

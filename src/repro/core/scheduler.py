@@ -1,43 +1,110 @@
-"""Stateless critical-path scheduler (Hippo §4.3).
+"""Pluggable stateless scheduling policies (Hippo §4.3, beyond-paper).
 
-The scheduler receives a transient stage tree, estimates each stage's
+Every policy receives a transient stage tree, estimates each stage's
 execution time as ``steps × profiled seconds-per-step`` (profile stored in
-the search plan, §4.3), and repeatedly extracts the *critical path* — the
-root-to-leaf path with the longest remaining estimated time — assigning the
-whole path to one idle worker.  Scheduling whole paths ("batch of stages")
-instead of single stages avoids checkpoint save/load transitions and
-prioritizes end-to-end completion time.
+the search plan, §4.3), and extracts whole root-to-leaf *chains* ("batch of
+stages") for idle workers — scheduling whole paths instead of single stages
+avoids checkpoint save/load transitions.
 
-The scheduler keeps **no execution state**: callers re-generate a fresh
-stage tree from the search plan every scheduling round, and stages already
-covered by running work simply never appear in the new tree (they are
-deferred by Algorithm 1's running check).
+The policies keep **no execution state about stages**: callers re-generate
+a fresh stage tree from the search plan every scheduling round, and stages
+already covered by running work simply never appear in the new tree (they
+are deferred by Algorithm 1's running check).  ``FairShareScheduler`` does
+carry *accounting* state (GPU-seconds charged per study) — that is policy
+memory, not execution state, and the paper's stateless-stage-tree property
+is untouched.
 
-Beyond-paper option: ``weighted=True`` weights each path by the number of
-pending report-leaves it unblocks, divided by its length — shared prefixes
-with high fan-out get scheduled first, improving end-to-end time at equal
-GPU-hours (see EXPERIMENTS.md §Perf).
+Policies:
+
+* :class:`CriticalPathScheduler` — the paper's policy: repeatedly extract
+  the root-to-leaf path with the longest remaining estimated time.
+* :class:`WeightedFanoutScheduler` — beyond-paper: weight each path by the
+  number of pending report-leaves it unblocks divided by its length; shared
+  prefixes with high fan-out get scheduled first, improving end-to-end time
+  at equal GPU-hours (see EXPERIMENTS.md §Perf).
+* :class:`FIFOScheduler` — chains in stage-creation (= request arrival)
+  order; the Ray-Tune-like baseline, useful to quantify what critical-path
+  ordering buys.
+* :class:`FairShareScheduler` — multi-study scenario (§6.2): prefer chains
+  serving the study with the least GPU-time charged so far, so one study
+  with many long trials cannot starve a small concurrent study.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.searchplan import SearchPlan
 from repro.core.stagetree import Stage, StageTree
 
-__all__ = ["CriticalPathScheduler"]
+__all__ = ["SchedulingPolicy", "CriticalPathScheduler",
+           "WeightedFanoutScheduler", "FIFOScheduler", "FairShareScheduler",
+           "POLICIES", "make_policy"]
 
 
-class CriticalPathScheduler:
-    def __init__(self, weighted: bool = False):
-        self.weighted = weighted
+class SchedulingPolicy:
+    """Interface the execution engine drives each scheduling round."""
+
+    name = "base"
+
+    def next_path(self, plan: SearchPlan, tree: StageTree,
+                  taken: set) -> Optional[List[Stage]]:
+        """The next chain of unscheduled stages, or None when exhausted.
+
+        A chain starts at a stage whose parent is either absent or already
+        taken and extends downward through children; implementations must
+        add every returned stage id to ``taken``.
+        """
+        raise NotImplementedError
+
+    def on_path_assigned(self, plan: SearchPlan, path: List[Stage]) -> None:
+        """Hook invoked once per extracted chain (accounting policies)."""
+
+    def on_stages_unassigned(self, plan: SearchPlan,
+                             stages: List[Stage]) -> None:
+        """Hook invoked by the dispatcher for extracted stages that did NOT
+        execute this round (chain truncation, deferred input) — accounting
+        policies refund them here; they will be re-extracted later."""
+
+    def assign(self, plan: SearchPlan, tree: StageTree,
+               n_paths: int) -> List[List[Stage]]:
+        """Extract up to ``n_paths`` disjoint chains for idle workers."""
+        taken: set = set()
+        out = []
+        for _ in range(n_paths):
+            p = self.next_path(plan, tree, taken)
+            if p is None:
+                break
+            self.on_path_assigned(plan, p)
+            out.append(p)
+        return out
 
     # ------------------------------------------------------------- estimates
     def stage_time(self, plan: SearchPlan, stage: Stage) -> float:
         return stage.steps * plan.profile_of(stage.node_id)
 
+
+class CriticalPathScheduler(SchedulingPolicy):
+    """The paper's critical-path extraction (§4.3).
+
+    ``weighted=True`` is a compatibility alias for
+    :class:`WeightedFanoutScheduler` priorities.
+    """
+
+    name = "critical_path"
+
+    def __init__(self, weighted: bool = False):
+        self.weighted = weighted
+
     # ------------------------------------------------------------ scheduling
+    def _head_priority(self, stage: Stage, remaining: Dict[str, float],
+                       fanout: Dict[str, int]):
+        """Priority of a candidate chain head; subclass hook."""
+        t = remaining[stage.stage_id]
+        if self.weighted:
+            return fanout[stage.stage_id] / max(t, 1e-9)
+        return t
+
     def next_path(self, plan: SearchPlan, tree: StageTree,
                   taken: set) -> Optional[List[Stage]]:
         """The highest-priority maximal chain of unscheduled stages.
@@ -74,13 +141,8 @@ class CriticalPathScheduler:
         if not heads:
             return None
 
-        def priority(s: Stage) -> float:
-            t = remaining[s.stage_id]
-            if self.weighted:
-                return fanout[s.stage_id] / max(t, 1e-9)
-            return t
-
-        head = max(heads, key=priority)
+        head = max(heads, key=lambda s: self._head_priority(s, remaining,
+                                                            fanout))
 
         # extend the chain downward along the heaviest child
         path, cur = [], head
@@ -97,14 +159,111 @@ class CriticalPathScheduler:
                 return path
             cur = nxt
 
-    def assign(self, plan: SearchPlan, tree: StageTree,
-               n_paths: int) -> List[List[Stage]]:
-        """Extract up to ``n_paths`` disjoint chains for idle workers."""
-        taken: set = set()
-        out = []
-        for _ in range(n_paths):
-            p = self.next_path(plan, tree, taken)
-            if p is None:
-                break
-            out.append(p)
-        return out
+
+class WeightedFanoutScheduler(CriticalPathScheduler):
+    """Fan-out-per-second priority: unblock many report leaves early."""
+
+    name = "weighted_fanout"
+
+    def __init__(self):
+        super().__init__(weighted=True)
+
+
+class FIFOScheduler(SchedulingPolicy):
+    """Chains in stage-creation order — request arrival order, since stage
+    numbering follows pending-request order.  No time estimates used."""
+
+    name = "fifo"
+
+    def next_path(self, plan: SearchPlan, tree: StageTree,
+                  taken: set) -> Optional[List[Stage]]:
+        head = next(
+            (s for s in tree.stages.values()
+             if s.stage_id not in taken
+             and (s.parent is None or s.parent in taken)), None)
+        if head is None:
+            return None
+        path, cur = [], head
+        while True:
+            path.append(cur)
+            taken.add(cur.stage_id)
+            nxt = next((c for c in cur.children if c not in taken), None)
+            if nxt is None:
+                return path
+            cur = tree.stages[nxt]
+
+
+class FairShareScheduler(CriticalPathScheduler):
+    """Per-study fair share for concurrent studies on one plan (§6.2).
+
+    Each extracted stage is charged (its estimated GPU-seconds) to every
+    study whose trials it serves; candidate heads are ranked by the
+    *least-served* study they would serve, with critical-path remaining
+    time as tie-break.  Shared stages count toward every sharing study —
+    reuse is free capacity, so it is credited to all of them.  Stages the
+    dispatcher could not actually run this round (truncated tails, deferred
+    chains) are refunded via ``on_stages_unassigned`` so rescheduling does
+    not double-charge.
+    """
+
+    name = "fair_share"
+
+    def __init__(self):
+        super().__init__()
+        self.usage: Dict[str, float] = {}   # study id -> charged GPU-seconds
+        self._plan_studies: Dict[str, frozenset] = {}
+
+    def _studies_of(self, plan: SearchPlan, stage: Stage) -> Set[str]:
+        studies: Set[str] = set()
+        for tid in plan.node(stage.node_id).trials:
+            studies |= plan.studies_of_trial(tid)
+        return studies
+
+    def _head_priority(self, stage, remaining, fanout):
+        studies = self._plan_studies.get(stage.stage_id, frozenset())
+        if studies:
+            least = min(self.usage.get(s, 0.0) for s in studies)
+        else:
+            # no study attribution (submit() without study=): rank as the
+            # most-served so unattributed work never starves real studies
+            least = max(self.usage.values(), default=0.0)
+        # smaller charged usage → higher priority; remaining time tie-break
+        return (-least, remaining[stage.stage_id])
+
+    def next_path(self, plan, tree, taken):
+        if not taken or not self._plan_studies:
+            # first extraction of a scheduling round: cache stage → studies
+            # once; later extractions on the same tree reuse it
+            self._plan_studies = {sid: frozenset(self._studies_of(plan, st))
+                                  for sid, st in tree.stages.items()}
+        return super().next_path(plan, tree, taken)
+
+    def _charge(self, plan: SearchPlan, stages: List[Stage],
+                sign: float) -> None:
+        for st in stages:
+            cost = sign * self.stage_time(plan, st)
+            for s in self._studies_of(plan, st):
+                self.usage[s] = self.usage.get(s, 0.0) + cost
+
+    def on_path_assigned(self, plan: SearchPlan, path: List[Stage]) -> None:
+        self._charge(plan, path, 1.0)
+
+    def on_stages_unassigned(self, plan: SearchPlan,
+                             stages: List[Stage]) -> None:
+        self._charge(plan, stages, -1.0)
+
+
+POLICIES: Dict[str, Callable[[], SchedulingPolicy]] = {
+    "critical_path": CriticalPathScheduler,
+    "weighted_fanout": WeightedFanoutScheduler,
+    "fifo": FIFOScheduler,
+    "fair_share": FairShareScheduler,
+}
+
+
+def make_policy(name: str) -> SchedulingPolicy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; one of {sorted(POLICIES)}")

@@ -24,12 +24,24 @@ Per-node fields mirror Figure 6:
 * ``refcount`` / ``trials`` — bookkeeping for GC and multi-study sharing,
 * ``profile``   — measured seconds/step under this configuration (used by
   the critical-path scheduler).
+
+Incremental control plane (beyond-paper, semantics-preserving): the plan
+keeps a monotonic ``revision`` counter plus a *change log* of node ids whose
+stage-tree-relevant state (checkpoints, metrics, running marks) mutated, and
+maintains a **pending-request index** so ``pending_requests()`` is O(pending)
+instead of a full node scan.  Consumers like
+:class:`~repro.core.stagetree.StageTreeBuilder` use ``revision`` /
+``changes_since`` to memoize Algorithm-1 resolutions across scheduling
+rounds.  All mutations must therefore go through the plan's methods
+(``submit`` / ``record_result`` / ``mark_running`` / ``clear_running`` /
+``drop_request`` / ``release_trial`` / ``evict_ckpts``) — never poke node
+fields directly.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
+from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
 from repro.core.trial import Trial
 from repro.utils import stable_hash
@@ -90,9 +102,13 @@ class PlanNode:
         )
 
 
-@dataclass(frozen=True)
-class Request:
-    """A pending unit of work: train the path of ``node`` up to ``step``."""
+class Request(NamedTuple):
+    """A pending unit of work: train the path of ``node`` up to ``step``.
+
+    A NamedTuple (not a dataclass): requests are hashed millions of times as
+    memo keys in the incremental stage-tree builder, and tuple hashing is
+    several times faster than dataclass field hashing.
+    """
 
     node_id: str
     step: int
@@ -116,6 +132,41 @@ class SearchPlan:
         # trial_id -> (leaf node id, total steps)  for each submitted request
         self.trial_paths: Dict[str, List[str]] = {}
         self.default_profile: float = 1.0  # seconds/step fallback
+        # trial_id -> study ids that submitted it (fair-share scheduling)
+        self.trial_studies: Dict[str, Set[str]] = {}
+        # ---- incremental control plane ----
+        self.revision = 0                       # bumps on every mutation
+        self._change_log: List[str] = []        # node ids with resolution-
+        #                                         relevant changes, in order
+        self._pending: Dict[str, Set[int]] = {}  # node_id -> pending steps
+        self._order: Dict[str, int] = {}        # node_id -> creation seq
+        self._depth: Dict[str, int] = {}        # node_id -> path length
+        self._path_keys: Dict[str, str] = {}    # node_id -> cached path_key
+
+    # -------------------------------------------------------- change tracking
+    def _touch(self, node_id: Optional[str] = None) -> None:
+        """Bump ``revision``; log ``node_id`` when the mutation can change
+        Algorithm-1 resolutions (checkpoints / running marks / metrics)."""
+        self.revision += 1
+        if node_id is not None:
+            self._change_log.append(node_id)
+
+    def changes_since(self, pos: int) -> Tuple[int, Set[str]]:
+        """(new log position, node ids mutated since ``pos``)."""
+        log = self._change_log
+        return len(log), set(log[pos:])
+
+    def _refresh_pending(self, node: PlanNode, step: int) -> None:
+        """Re-derive the pending-index membership of one (node, step)."""
+        if (step in node.requests and step not in node.metrics
+                and step not in node.running):
+            self._pending.setdefault(node.node_id, set()).add(step)
+        else:
+            steps = self._pending.get(node.node_id)
+            if steps is not None:
+                steps.discard(step)
+                if not steps:
+                    del self._pending[node.node_id]
 
     # ------------------------------------------------------------- structure
     def _new_node(self, parent: Optional[str], start: int, desc: Dict[str, Any]) -> PlanNode:
@@ -126,6 +177,8 @@ class SearchPlan:
         self.children.setdefault(parent, []).append(nid)
         self.children.setdefault(nid, [])
         self._index[(parent, start, stable_hash(desc))] = nid
+        self._order[nid] = len(self._order)
+        self._depth[nid] = 1 if parent is None else self.depth_of(parent) + 1
         return node
 
     def get_or_create(self, parent: Optional[str], start: int, desc: Dict[str, Any]) -> PlanNode:
@@ -156,13 +209,28 @@ class SearchPlan:
 
         Checkpoints are addressed by (path_key, step): any two trials whose
         hp values coincide up to ``step`` share the path and therefore the
-        checkpoint — across studies too.
+        checkpoint — across studies too.  A node's path is immutable, so the
+        key is computed once (O(depth)) and cached forever.
         """
-        path = [(n.start, n.desc) for n in self.path_to_root(node_id)]
-        return stable_hash({"plan_key": self.key, "path": path})
+        key = self._path_keys.get(node_id)
+        if key is None:
+            path = [(n.start, n.desc) for n in self.path_to_root(node_id)]
+            key = stable_hash({"plan_key": self.key, "path": path})
+            self._path_keys[node_id] = key
+        return key
+
+    def depth_of(self, node_id: str) -> int:
+        """Path length root→node (cached; equals len(path_to_root))."""
+        d = self._depth.get(node_id)
+        if d is None:
+            n = self.nodes[node_id]
+            d = 1 if n.parent is None else self.depth_of(n.parent) + 1
+            self._depth[node_id] = d
+        return d
 
     # ------------------------------------------------------------ insertion
-    def submit(self, trial: Trial, upto: Optional[int] = None) -> Tuple[PlanNode, int, bool]:
+    def submit(self, trial: Trial, upto: Optional[int] = None,
+               study: Optional[str] = None) -> Tuple[PlanNode, int, bool]:
         """Insert (or match) a trial's prefix up to ``upto`` steps and record
         a request.  Returns (leaf node, step, satisfied) where satisfied is
         True iff metrics for that exact step are already present (§3.2 "in
@@ -182,14 +250,31 @@ class SearchPlan:
         self.trial_paths.setdefault(trial.trial_id, [])
         path_ids = [n.node_id for n in self.path_to_root(node.node_id)]
         self.trial_paths[trial.trial_id] = path_ids
+        if study is not None:
+            self.trial_studies.setdefault(trial.trial_id, set()).add(study)
+        self._touch()  # new nodes / requests invalidate cached stage trees
         if step in node.metrics:
             return node, step, True
         node.requests.add(step)
+        self._refresh_pending(node, step)
         return node, step, False
 
     # ------------------------------------------------------------- requests
     def pending_requests(self) -> List[Request]:
-        """Requests with no metrics yet and not currently running."""
+        """Requests with no metrics yet and not currently running.
+
+        Served from the maintained index — O(pending), not O(plan) — in the
+        same (node creation, step) order the full scan produces.
+        """
+        out = []
+        for nid in sorted(self._pending, key=self._order.__getitem__):
+            for s in sorted(self._pending[nid]):
+                out.append(Request(nid, s))
+        return out
+
+    def pending_requests_scan(self) -> List[Request]:
+        """Reference full scan of every node (the pre-index implementation).
+        Kept for equivalence tests and control-plane benchmarks."""
         out = []
         for n in self.nodes.values():
             for s in sorted(n.requests):
@@ -200,11 +285,24 @@ class SearchPlan:
 
     def mark_running(self, reqs: Iterable[Request]) -> None:
         for r in reqs:
-            self.nodes[r.node_id].running.add(r.step)
+            n = self.nodes[r.node_id]
+            n.running.add(r.step)
+            self._refresh_pending(n, r.step)
+            self._touch(r.node_id)
 
     def clear_running(self, reqs: Iterable[Request]) -> None:
         for r in reqs:
-            self.nodes[r.node_id].running.discard(r.step)
+            n = self.nodes[r.node_id]
+            n.running.discard(r.step)
+            self._refresh_pending(n, r.step)
+            self._touch(r.node_id)
+
+    def drop_request(self, node_id: str, step: int) -> None:
+        """Withdraw a pending request (kill path) — index-safe removal."""
+        n = self.nodes[node_id]
+        n.requests.discard(step)
+        self._refresh_pending(n, step)
+        self._touch()
 
     def is_satisfied(self, node_id: str, step: int) -> bool:
         return step in self.nodes[node_id].metrics
@@ -218,6 +316,8 @@ class SearchPlan:
         if metrics is not None:
             n.metrics[step] = dict(metrics)
         n.running.discard(step)
+        self._refresh_pending(n, step)
+        self._touch(node_id)
 
     def record_profile(self, node_id: str, seconds_per_step: float) -> None:
         n = self.nodes[node_id]
@@ -242,7 +342,22 @@ class SearchPlan:
                 n.refcount -= 1
                 if n.refcount <= 0:
                     dead.append(nid)
+        self.trial_studies.pop(trial_id, None)
         return dead
+
+    def evict_ckpts(self, node_id: str) -> List[str]:
+        """Forget a node's checkpoints (store eviction upstream); returns the
+        checkpoint ids so the caller can drop them from the store.  Logged as
+        a resolution-relevant change: Algorithm 1 must stop resuming here."""
+        n = self.nodes[node_id]
+        cids = list(n.ckpts.values())
+        if cids:
+            n.ckpts.clear()
+            self._touch(node_id)
+        return cids
+
+    def studies_of_trial(self, trial_id: str) -> Set[str]:
+        return self.trial_studies.get(trial_id, set())
 
     # ------------------------------------------------------------- metrics
     def metrics_for(self, node_id: str, step: int) -> Optional[Dict[str, float]]:
@@ -265,6 +380,7 @@ class SearchPlan:
             "nodes": {nid: n.to_json() for nid, n in self.nodes.items()},
             "trial_paths": self.trial_paths,
             "default_profile": self.default_profile,
+            "trial_studies": {t: sorted(s) for t, s in self.trial_studies.items()},
         }
 
     @classmethod
@@ -278,5 +394,11 @@ class SearchPlan:
             plan.children.setdefault(node.parent, []).append(nid)
             plan.children.setdefault(nid, [])
             plan._index[(node.parent, node.start, stable_hash(node.desc))] = nid
+            plan._order[nid] = len(plan._order)
+            for s in node.requests:
+                plan._refresh_pending(node, s)
         plan.trial_paths = {k: list(v) for k, v in d["trial_paths"].items()}
+        plan.trial_studies = {t: set(s)
+                              for t, s in d.get("trial_studies", {}).items()}
+        plan._touch()
         return plan

@@ -21,6 +21,15 @@ in the plan.
 * Consecutive cuts inside one node become chained stages; the first stage of
   a node attaches either to its resume checkpoint or to the parent node's
   stage ending at ``node.start``.
+
+:class:`StageTreeBuilder` is the incremental flavour of the same algorithm:
+it memoizes ``find_latest_checkpoint`` resolutions across scheduling rounds,
+keyed on the plan's ``revision``, and invalidates only the subtrees touched
+by new results / running marks / checkpoint evictions.  The produced trees
+are *identical* (same stages in the same order, same resumes / parents /
+report flags) to a from-scratch ``build_stage_tree`` — ``stage_trees_equal``
+is the property-style check, and ``StageTreeBuilder(plan, verify=True)``
+asserts it on every build.
 """
 
 from __future__ import annotations
@@ -30,7 +39,8 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.searchplan import Request, SearchPlan
 
-__all__ = ["Stage", "StageTree", "build_stage_tree"]
+__all__ = ["Stage", "StageTree", "StageTreeBuilder", "build_stage_tree",
+           "stage_trees_equal"]
 
 
 @dataclass
@@ -111,7 +121,9 @@ _FRESH = ("fresh", None, 0)
 _DEFER = ("defer", None, 0)
 
 
-def _find_latest_checkpoint(plan: SearchPlan, req: Request, lookup: Dict) -> None:
+def _find_latest_checkpoint(plan: SearchPlan, req: Request, lookup: Dict,
+                            index: Optional[Dict[str, Set[Request]]] = None,
+                            ) -> None:
     """Resolve ``req`` to a resume point, memoized in ``lookup``.
 
     lookup[req] is one of
@@ -120,10 +132,16 @@ def _find_latest_checkpoint(plan: SearchPlan, req: Request, lookup: Dict) -> Non
       ("fresh", None, 0)       — train from a fresh model,
       ("defer", None, 0)       — a running execution covers part of the path;
                                  revisit in a later stage tree.
+
+    ``index`` (incremental builder) maps node_id → requests whose resolution
+    is cached for that node; every insertion is recorded there so the builder
+    can invalidate exactly the entries a node mutation makes stale.
     """
     if req in lookup:                                            # memoized (line 18)
         return
     node = plan.node(req.node_id)
+    if index is not None:
+        index.setdefault(req.node_id, set()).add(req)
 
     # A running execution on this node will deposit checkpoints through the
     # range we need — defer instead of duplicating (Algorithm 1 line 15-16:
@@ -145,7 +163,7 @@ def _find_latest_checkpoint(plan: SearchPlan, req: Request, lookup: Dict) -> Non
 
     # Recurse to the parent configuration at this node's start (lines 26-28).
     parent_req = Request(node.parent, node.start)
-    _find_latest_checkpoint(plan, parent_req, lookup)
+    _find_latest_checkpoint(plan, parent_req, lookup, index)
     if lookup[parent_req][0] == "defer":
         lookup[req] = _DEFER
     else:
@@ -158,7 +176,17 @@ def build_stage_tree(plan: SearchPlan) -> StageTree:
     pending = plan.pending_requests()
     for req in pending:                                          # lines 3-5
         _find_latest_checkpoint(plan, req, lookup)
+    return _emit_tree(plan, lookup, pending)
 
+
+def _emit_tree(plan: SearchPlan, lookup: Dict[Request, tuple],
+               pending: List[Request]) -> StageTree:
+    """Turn resolved requests into the stage forest (Algorithm 1 lines 6-14).
+
+    ``lookup`` iteration order determines stage numbering; callers must pass
+    entries in resolution order (ancestors before the requests that chain to
+    them) so incremental and from-scratch builds emit identical trees.
+    """
     tree = StageTree()
     pending_set: Set[Request] = set(pending)
 
@@ -193,9 +221,10 @@ def build_stage_tree(plan: SearchPlan) -> StageTree:
     # Nodes reached only through ("parent", ...) have resume=None: they chain
     # from the parent node's stage ending at node.start.
     made: Dict[Tuple[str, int], str] = {}   # (node_id, stop step) -> stage id
+    done: Set[str] = set()                  # nodes fully emitted
 
     def emit_node(node_id: str) -> None:
-        if made.get(("done", node_id)):
+        if node_id in done:
             return
         info = by_node[node_id]
         node = plan.node(node_id)
@@ -235,15 +264,132 @@ def build_stage_tree(plan: SearchPlan) -> StageTree:
             made[(node_id, hi)] = st.stage_id
             prev_stage = st.stage_id
             lo = hi
-        made[("done", node_id)] = True  # type: ignore[index]
+        done.add(node_id)
 
     def emit_node_if_needed(node_id: str) -> None:
-        if node_id in by_node and not made.get(("done", node_id)):
+        if node_id in by_node and node_id not in done:
             emit_node(node_id)
 
     # Emit parents before children (requests on ancestors appear in by_node).
-    order = sorted(by_node, key=lambda nid: len(plan.path_to_root(nid)))
+    order = sorted(by_node, key=plan.depth_of)
     for nid in order:
         emit_node_if_needed(nid)
 
     return tree
+
+
+# --------------------------------------------------------------------------
+# Incremental builder
+# --------------------------------------------------------------------------
+
+
+def stage_trees_equal(a: StageTree, b: StageTree) -> bool:
+    """Structural identity: same stage ids, intervals, resumes, parents,
+    children order and report flags."""
+    if list(a.stages) != list(b.stages) or a.roots != b.roots:
+        return False
+    for sid, sa in a.stages.items():
+        sb = b.stages[sid]
+        if (sa.node_id, sa.start, sa.stop, sa.resume, sa.parent,
+                sa.children, sa.report) != (
+                sb.node_id, sb.start, sb.stop, sb.resume, sb.parent,
+                sb.children, sb.report):
+            return False
+    return True
+
+
+class StageTreeBuilder:
+    """Incremental Algorithm 1: memoize resolutions across scheduling rounds.
+
+    The builder keeps the ``find_latest_checkpoint`` lookup table alive
+    between builds.  Each build consumes the plan's change log and drops
+    cached resolutions for every touched node *and its whole subtree* —
+    a resolution only ever depends on the node's own checkpoints/running
+    marks and those of its ancestors, so descendants of a changed node are
+    exactly the entries that can go stale.  Requests are then resolved
+    against the surviving cache (new/invalidated ones recompute, the rest
+    hit), and the transient stage forest is emitted fresh, in from-scratch
+    order, so the result is bit-identical to ``build_stage_tree(plan)``.
+
+    When the plan's revision is unchanged since the previous build the
+    previous tree is returned as-is (stage trees are read-only to the
+    scheduler), making no-op scheduling rounds O(1).
+
+    Instrumentation: ``builds`` / ``tree_cache_hits`` count full builds vs
+    same-revision returns; ``resolves`` / ``resolve_hits`` count Algorithm-1
+    resolutions computed vs served from the memo.
+    """
+
+    def __init__(self, plan: SearchPlan, verify: bool = False):
+        self.plan = plan
+        self.verify = verify
+        self._lookup: Dict[Request, tuple] = {}
+        self._by_node: Dict[str, Set[Request]] = {}
+        self._log_pos = 0
+        self._cached_revision: Optional[int] = None
+        self._cached_tree: Optional[StageTree] = None
+        self.builds = 0
+        self.tree_cache_hits = 0
+        self.resolves = 0
+        self.resolve_hits = 0
+        self.invalidated_nodes = 0
+
+    # ------------------------------------------------------------ invalidation
+    def _invalidate(self, dirty: Set[str]) -> None:
+        stack, seen = list(dirty), set()
+        while stack:
+            nid = stack.pop()
+            if nid in seen:
+                continue
+            seen.add(nid)
+            for req in self._by_node.pop(nid, ()):
+                self._lookup.pop(req, None)
+            stack.extend(self.plan.children.get(nid, ()))
+        self.invalidated_nodes += len(seen)
+
+    # ------------------------------------------------------------------ build
+    def build(self) -> StageTree:
+        plan = self.plan
+        if (self._cached_tree is not None
+                and plan.revision == self._cached_revision):
+            self.tree_cache_hits += 1
+            return self._cached_tree
+
+        self._log_pos, dirty = plan.changes_since(self._log_pos)
+        if dirty:
+            self._invalidate(dirty)
+
+        pending = plan.pending_requests()
+        # Rebuild the *active* lookup — the closure of pending requests under
+        # ("parent", req) links — in from-scratch insertion order: for each
+        # pending request, its unresolved ancestor chain first (deepest
+        # ancestor → request), skipping entries already active.
+        active: Dict[Request, tuple] = {}
+        lookup = self._lookup
+        for req in pending:
+            chain: List[Request] = []
+            cur: Optional[Request] = req
+            while cur is not None and cur not in active:
+                res = lookup.get(cur)
+                if res is None:
+                    self.resolves += 1
+                    _find_latest_checkpoint(plan, cur, lookup, self._by_node)
+                    res = lookup[cur]
+                else:
+                    self.resolve_hits += 1
+                chain.append(cur)
+                cur = res[1] if res[0] == "parent" else None
+            for r in reversed(chain):
+                active[r] = lookup[r]
+
+        tree = _emit_tree(plan, active, pending)
+        self._cached_revision = plan.revision
+        self._cached_tree = tree
+        self.builds += 1
+        if self.verify:
+            ref = build_stage_tree(plan)
+            assert stage_trees_equal(tree, ref), (
+                f"incremental stage tree diverged from scratch build:\n"
+                f"  incremental: {sorted(map(repr, tree.stages.values()))}\n"
+                f"  scratch:     {sorted(map(repr, ref.stages.values()))}")
+        return tree

@@ -16,11 +16,12 @@ Typical use (mirrors Figure 11)::
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.db import SearchPlanDB, study_key
 from repro.core.engine import EngineStats, ExecutionEngine, Tuner
-from repro.core.scheduler import CriticalPathScheduler
+from repro.core.scheduler import (CriticalPathScheduler, SchedulingPolicy,
+                                  make_policy)
 from repro.core.trainer import TrainerBackend
 from repro.train.checkpoint import CheckpointStore
 
@@ -42,12 +43,29 @@ class Study:
     def engine(self, backend: TrainerBackend, n_workers: int = 4,
                gpus_per_worker: int = 1, share: bool = True,
                weighted_paths: bool = False,
-               store: Optional[CheckpointStore] = None) -> ExecutionEngine:
+               policy: Union[str, SchedulingPolicy, None] = None,
+               store: Optional[CheckpointStore] = None,
+               max_steps_per_chain: Optional[int] = None) -> ExecutionEngine:
+        """``policy`` selects the scheduling policy by name ("critical_path",
+        "weighted_fanout", "fifo", "fair_share") or instance; the legacy
+        ``weighted_paths`` flag is kept as a shorthand for the default."""
+        if policy is not None and weighted_paths:
+            raise ValueError(
+                "pass either policy=... or the legacy weighted_paths=True "
+                "(= policy='weighted_fanout'), not both")
+        if policy is None:
+            scheduler: SchedulingPolicy = CriticalPathScheduler(
+                weighted=weighted_paths)
+        elif isinstance(policy, str):
+            scheduler = make_policy(policy)
+        else:
+            scheduler = policy
         return ExecutionEngine(
             self.db.get(self.key), backend, n_workers=n_workers,
             gpus_per_worker=gpus_per_worker,
-            scheduler=CriticalPathScheduler(weighted=weighted_paths),
-            store=store, share=share)
+            scheduler=scheduler,
+            store=store, share=share,
+            max_steps_per_chain=max_steps_per_chain)
 
     def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
             **kw) -> EngineStats:

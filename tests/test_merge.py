@@ -1,6 +1,8 @@
 """Merge rates p and q (§6, "Merge rate")."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hpseq import Constant, HpConfig, MultiStep, StepLR

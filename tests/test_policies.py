@@ -1,0 +1,132 @@
+"""Pluggable scheduling policies: FIFO, weighted fan-out, per-study fair
+share — plus the policy factory and Study wiring."""
+
+import pytest
+
+from repro.core import SearchPlan, SearchPlanDB, Study, build_stage_tree, run_studies
+from repro.core.hpseq import Constant, HpConfig, MultiStep
+from repro.core.scheduler import (POLICIES, CriticalPathScheduler,
+                                  FIFOScheduler, FairShareScheduler,
+                                  WeightedFanoutScheduler, make_policy)
+from repro.core.trainer import SimulatedTrainer
+from repro.core.trial import Trial
+from repro.core.tuners import GridTuner
+
+
+def mk(lr, steps):
+    return Trial(HpConfig({"lr": lr}), steps)
+
+
+def branching_plan():
+    plan = SearchPlan()
+    short = mk(MultiStep(0.1, [100], values=[0.1, 0.05]), 200)
+    long = mk(MultiStep(0.1, [100], values=[0.1, 0.01]), 400)
+    plan.submit(short)
+    plan.submit(long)
+    return plan
+
+
+def test_factory_and_registry():
+    for name in ("critical_path", "weighted_fanout", "fifo", "fair_share"):
+        assert name in POLICIES
+        assert make_policy(name).next_path is not None
+    with pytest.raises(ValueError):
+        make_policy("round_robin")
+
+
+def test_fifo_takes_first_submitted_branch_first():
+    plan = branching_plan()
+    tree = build_stage_tree(plan)
+    paths = FIFOScheduler().assign(plan, tree, 4)
+    # chain 1: root + the FIRST-submitted branch (200 total), regardless of
+    # the 400-step critical path
+    assert sum(s.steps for s in paths[0]) == 200
+    assert sum(s.steps for s in paths[1]) == 300
+    # disjoint full coverage, chains parent-connected
+    seen = set()
+    for p in paths:
+        for prev, cur in zip(p, p[1:]):
+            assert cur.parent == prev.stage_id
+        for s in p:
+            assert s.stage_id not in seen
+            seen.add(s.stage_id)
+    assert seen == set(tree.stages)
+
+
+def test_weighted_fanout_matches_legacy_flag():
+    plan = branching_plan()
+    legacy = CriticalPathScheduler(weighted=True).assign(
+        plan, build_stage_tree(plan), 4)
+    new = WeightedFanoutScheduler().assign(plan, build_stage_tree(plan), 4)
+    assert [[s.stage_id for s in p] for p in legacy] == \
+        [[s.stage_id for s in p] for p in new]
+
+
+def test_fair_share_prefers_least_served_study():
+    plan = SearchPlan()
+    # study A: two long disjoint trials; study B: one short trial
+    a1 = mk(Constant(0.1), 400)
+    a2 = mk(Constant(0.2), 400)
+    b1 = mk(Constant(0.05), 100)
+    plan.submit(a1, study="A")
+    plan.submit(a2, study="A")
+    plan.submit(b1, study="B")
+    tree = build_stage_tree(plan)
+    sched = FairShareScheduler()
+    paths = sched.assign(plan, tree, 3)
+    serving = [plan.studies_of_trial(next(iter(
+        plan.node(p[0].node_id).trials))) for p in paths]
+    # chain 1 goes to A (tie on usage, critical path breaks it); chain 2 must
+    # serve the not-yet-served study B even though A has the longer remainder
+    assert serving[0] == {"A"}
+    assert serving[1] == {"B"}
+    assert serving[2] == {"A"}
+    assert sched.usage["A"] > sched.usage["B"] > 0
+
+
+def test_fair_share_engine_run_completes():
+    db = SearchPlanDB()
+    studies = []
+    for i in range(2):
+        st = Study.create(db, "m", "d", ("lr",))
+        trials = [mk(Constant(0.01 * (i + 1) + 0.005 * j), 60)
+                  for j in range(3)]
+        studies.append((st, GridTuner(trials)))
+    stats = run_studies(studies, SimulatedTrainer(), n_workers=2,
+                        policy="fair_share")
+    assert stats.gpu_seconds > 0 and stats.end_to_end > 0
+    plan = db.get(studies[0][0].key)
+    assert plan.pending_requests() == []
+
+
+def test_fair_share_refunds_deferred_and_truncated_chains():
+    """Chains cut or deferred by the dispatcher must be refunded: usage must
+    reflect executed work only, never double-charge rescheduled stages."""
+    db = SearchPlanDB()
+    st = Study.create(db, "m", "d", ("lr",))
+    trials = [
+        mk(Constant(0.1), 50),
+        mk(MultiStep(0.1, [100], values=[0.1, 0.05]), 200),
+        mk(MultiStep(0.1, [100], values=[0.1, 0.02]), 150),
+    ]
+    sched = FairShareScheduler()
+    tuner = GridTuner(trials)
+    eng = st.engine(SimulatedTrainer(), n_workers=2, policy=sched,
+                    max_steps_per_chain=40)
+    stats = eng.run([tuner])
+    assert tuner.is_done()
+    assert stats.chains_deferred >= 1
+    # all work ran under one study: its net charge equals the executed
+    # stage seconds (1 s/step simulator), with no phantom re-charges
+    assert set(sched.usage) == {"study-0"}
+    assert sched.usage["study-0"] == pytest.approx(stats.steps_run, rel=1e-6)
+
+
+def test_study_engine_policy_by_name():
+    db = SearchPlanDB()
+    st = Study.create(db, "m", "d", ("lr",))
+    eng = st.engine(SimulatedTrainer(), policy="fifo")
+    assert isinstance(eng.scheduler, FIFOScheduler)
+    eng2 = st.engine(SimulatedTrainer(), weighted_paths=True)
+    assert isinstance(eng2.scheduler, CriticalPathScheduler)
+    assert eng2.scheduler.weighted

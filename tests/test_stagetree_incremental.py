@@ -1,0 +1,159 @@
+"""Incremental stage-tree builder ≡ from-scratch Algorithm 1.
+
+Property-style equivalence: for randomized interleavings of submit /
+record_result / mark_running / kill operations, the revision-memoized
+:class:`StageTreeBuilder` must produce stage trees *identical* to
+``build_stage_tree`` — same stage ids in the same order, same intervals,
+resumes, parents and report flags — and the maintained pending-request
+index must agree with a full scan.
+"""
+
+import random
+
+from repro.core.hpseq import Constant, HpConfig, MultiStep
+from repro.core.searchplan import Request, SearchPlan
+from repro.core.stagetree import (StageTreeBuilder, build_stage_tree,
+                                  stage_trees_equal)
+from repro.core.trial import Trial
+
+
+def random_trial(rng: random.Random) -> Trial:
+    """Trials over a small space so prefixes merge often."""
+    steps = rng.choice([40, 80, 120, 160])
+    base = rng.choice([0.1, 0.2])
+    n_drops = rng.randint(0, 2)
+    bounds = sorted(rng.sample([20, 40, 60, 80, 100, 120], n_drops))
+    bounds = [b for b in bounds if b < steps]
+    values = [base] + [round(base * 0.5 ** (i + 1), 4)
+                       for i in range(len(bounds))]
+    lr = MultiStep(base, bounds, values=values) if bounds else Constant(base)
+    return Trial(HpConfig({"lr": lr}), steps)
+
+
+def check(plan: SearchPlan, builder: StageTreeBuilder) -> None:
+    assert plan.pending_requests() == plan.pending_requests_scan()
+    incremental = builder.build()
+    scratch = build_stage_tree(plan)
+    assert stage_trees_equal(incremental, scratch), (
+        f"diverged at revision {plan.revision}:\n"
+        f"  incremental: {sorted(map(repr, incremental.stages.values()))}\n"
+        f"  scratch:     {sorted(map(repr, scratch.stages.values()))}")
+
+
+def random_walk(seed: int, n_ops: int = 120) -> None:
+    rng = random.Random(seed)
+    plan = SearchPlan(f"prop-{seed}")
+    builder = StageTreeBuilder(plan)
+    live_trials = []
+    running = []
+
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.40 or not plan.nodes:
+            t = random_trial(rng)
+            plan.submit(t, upto=rng.choice([None, 20, 60, 100]))
+            live_trials.append(t)
+        elif op < 0.65:
+            pend = plan.pending_requests()
+            if pend:
+                req = rng.choice(pend)
+                plan.mark_running([req])
+                running.append(req)
+        elif op < 0.90:
+            if running:
+                req = running.pop(rng.randrange(len(running)))
+                with_metrics = rng.random() < 0.8
+                plan.record_result(
+                    req.node_id, req.step, f"ck-{req.node_id}-{req.step}",
+                    {"val_acc": rng.random()} if with_metrics else None)
+            elif plan.pending_requests():
+                # checkpoint landing without an explicit running mark
+                req = rng.choice(plan.pending_requests())
+                plan.record_result(req.node_id, req.step,
+                                   f"ck-{req.node_id}-{req.step}",
+                                   {"val_acc": rng.random()})
+        else:
+            if live_trials:
+                t = live_trials.pop(rng.randrange(len(live_trials)))
+                path = list(plan.trial_paths.get(t.trial_id, []))
+                dead = plan.release_trial(t.trial_id)
+                for nid in path:
+                    node = plan.nodes[nid]
+                    for s in sorted(node.requests):
+                        if s not in node.running and s not in node.metrics:
+                            plan.drop_request(nid, s)
+                for nid in dead:
+                    plan.evict_ckpts(nid)
+        check(plan, builder)
+
+
+def test_randomized_equivalence():
+    for seed in range(8):
+        random_walk(seed)
+
+
+def test_builder_tree_cache_on_unchanged_revision():
+    plan = SearchPlan()
+    plan.submit(Trial(HpConfig({"lr": Constant(0.1)}), 100))
+    builder = StageTreeBuilder(plan)
+    t1 = builder.build()
+    t2 = builder.build()
+    assert t1 is t2                      # same revision → same tree object
+    assert builder.tree_cache_hits == 1
+    plan.submit(Trial(HpConfig({"lr": Constant(0.2)}), 100))
+    t3 = builder.build()
+    assert t3 is not t2
+    assert stage_trees_equal(t3, build_stage_tree(plan))
+
+
+def test_memoized_resolutions_are_reused():
+    """Steady-state round: resolving a new request must not re-resolve the
+    untouched rest of the plan."""
+    plan = SearchPlan()
+    for v in (0.1, 0.2, 0.3, 0.4):
+        plan.submit(Trial(HpConfig({"lr": Constant(v)}), 100))
+    builder = StageTreeBuilder(plan)
+    builder.build()
+    first_resolves = builder.resolves
+    assert first_resolves >= 4
+    # satisfy one request; only that node's subtree should re-resolve
+    req = plan.pending_requests()[0]
+    plan.record_result(req.node_id, req.step, "ck", {"val_acc": 0.5})
+    builder.build()
+    assert builder.resolves - first_resolves == 0      # nothing new to resolve
+    assert builder.resolve_hits >= 3                   # survivors were cached
+
+
+def test_stale_defer_is_invalidated_when_running_clears():
+    """A deferred resolution must be recomputed once the running stage
+    deposits its checkpoint — including the intermediate parent request."""
+    plan = SearchPlan()
+    long = Trial(HpConfig(
+        {"lr": MultiStep(0.1, [50], values=[0.1, 0.05])}), 100)
+    leaf, _, _ = plan.submit(long)
+    root = plan.path_to_root(leaf.node_id)[0]
+    builder = StageTreeBuilder(plan, verify=True)
+    builder.build()
+    # root starts running → child request defers
+    plan.mark_running([Request(root.node_id, 50)])
+    assert len(builder.build()) == 0
+    # root finishes with a checkpoint at 50 → child resumes from it
+    plan.record_result(root.node_id, 50, "ck50", {"val_acc": 0.4})
+    tree = builder.build()
+    stages = sorted(tree.stages.values(), key=lambda s: s.start)
+    assert stages[0].resume == (root.node_id, 50) or (
+        stages[0].node_id == leaf.node_id)
+    assert stage_trees_equal(tree, build_stage_tree(plan))
+
+
+def test_eviction_invalidates_resume_points():
+    plan = SearchPlan()
+    t = Trial(HpConfig({"lr": Constant(0.1)}), 200)
+    node, _, _ = plan.submit(t)
+    plan.record_result(node.node_id, 120, "ck120", None)
+    builder = StageTreeBuilder(plan, verify=True)
+    (st,) = builder.build().stages.values()
+    assert st.resume == (node.node_id, 120)
+    plan.evict_ckpts(node.node_id)
+    (st2,) = builder.build().stages.values()
+    assert st2.resume is None and st2.start == 0       # fresh retrain

@@ -7,6 +7,8 @@ load-bearing invariant behind lossless stage sharing.
 """
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hpseq import (Constant, Cosine, Cyclic, Exponential, HpConfig,
