@@ -1,0 +1,57 @@
+"""CI perf-trend gate for the incremental control plane.
+
+Compares the current ``BENCH_stagetree.json`` against the committed
+baseline (``benchmarks/baseline_stagetree.json``) and fails when the
+steady-state incremental scheduling round regresses more than ``2x``.
+
+Raw microseconds are meaningless across machines, so the comparison is
+normalized by the from-scratch ``build_stage_tree`` row — a pure-Python
+workload with no incremental caches that tracks overall machine speed:
+
+    normalized_cur = cur(steady_round_incremental)
+                     * base(build_stage_tree) / cur(build_stage_tree)
+
+Usage: ``python benchmarks/check_stagetree_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+THRESHOLD = 2.0
+
+
+def _row(rows, op: str) -> dict:
+    for r in rows:
+        if r["op"] == op:
+            return r
+    raise SystemExit(f"benchmark row {op!r} missing")
+
+
+def main(current_path: str = "BENCH_stagetree.json",
+         baseline_path: str = "benchmarks/baseline_stagetree.json",
+         threshold: float = THRESHOLD) -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    calib = (_row(base, "build_stage_tree")["us_per_op"]
+             / _row(cur, "build_stage_tree")["us_per_op"])
+    cur_us = _row(cur, "steady_round_incremental")["us_per_op"] * calib
+    base_us = _row(base, "steady_round_incremental")["us_per_op"]
+    ratio = cur_us / base_us
+    print(f"steady_round_incremental: {cur_us:.1f}us normalized "
+          f"(machine calib x{calib:.2f}) vs baseline {base_us:.1f}us "
+          f"-> ratio {ratio:.2f} (limit {threshold:.1f})")
+    if ratio > threshold:
+        raise SystemExit(
+            f"perf regression: steady incremental round is {ratio:.2f}x the "
+            f"committed baseline (limit {threshold:.1f}x)")
+    print("trend OK")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    main(*(argv[:2]))

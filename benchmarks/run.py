@@ -2,8 +2,10 @@
 
 ``PYTHONPATH=src python -m benchmarks.run`` runs everything and prints CSV
 blocks; individual benches are importable modules with ``main()``.  The
-control-plane rows are also written to ``BENCH_stagetree.json`` so the perf
-trajectory is tracked across PRs (CI uploads it as an artifact).
+control-plane rows land in ``BENCH_stagetree.json`` (gated against the
+committed baseline by ``check_stagetree_trend.py``) and the data-plane rows
+in ``BENCH_dataplane.json``, so the perf trajectory is tracked across PRs
+(CI uploads both as artifacts).
 """
 
 from __future__ import annotations
@@ -19,7 +21,7 @@ def dump_stagetree_json(rows, path: str = "BENCH_stagetree.json") -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_merge_rate,
+    from benchmarks import (bench_dataplane, bench_kernels, bench_merge_rate,
                             bench_multi_study, bench_single_study,
                             bench_stagetree)
 
@@ -27,6 +29,8 @@ def main() -> None:
         ("merge-rate table (paper Table 1)", bench_merge_rate),
         ("control-plane microbench (§4.3 stateless scheduler)",
          bench_stagetree),
+        ("data plane: per-step loop vs fused chunks vs batched siblings",
+         bench_dataplane),
         ("kernel allclose + timing", bench_kernels),
         ("single-study: trial vs stage (Figure 12 / Table 5)",
          bench_single_study),
@@ -38,6 +42,8 @@ def main() -> None:
         rows = mod.main()
         if mod is bench_stagetree:
             dump_stagetree_json(rows)
+        elif mod is bench_dataplane:
+            bench_dataplane.dump_json(rows)
 
 
 if __name__ == "__main__":

@@ -2,11 +2,22 @@
 
 Each round the dispatcher asks the :class:`~repro.core.stagetree.StageTreeBuilder`
 for the current stage tree (incrementally maintained — O(changed requests),
-not O(plan)), hands it to the scheduling policy, and executes the extracted
-chains on idle virtual workers: load the resume checkpoint (or chain off a
-state produced earlier in the same round), run each stage through the
-trainer backend, checkpoint at every stage boundary, and post a ``stage``
-event at the virtual completion time for the aggregator.
+not O(plan)), runs its **grouping pass** (when the backend batches sibling
+stages: collect ready siblings with identical step range / static hps /
+batch shapes via :func:`~repro.core.stagetree.sibling_groups` and execute
+each group as ONE batched backend call on one worker), hands the remaining
+tree to the scheduling policy, and executes the extracted chains on idle
+virtual workers: load the resume checkpoint (or chain off a state produced
+earlier in the same round — including states a batched group produced), run
+each stage through the trainer backend, checkpoint at every stage boundary,
+and post a ``stage`` event at the virtual completion time for the
+aggregator.
+
+Recompute-on-miss: a resume checkpoint the plan still lists but the store
+has dropped (external eviction) does not raise — the dispatcher counts a
+``ckpt_miss``, tells the plan to forget the stale entry, refunds the
+scheduler, and re-runs the round: Algorithm 1 re-derives the request from
+whatever remains (an earlier checkpoint, an ancestor, or a fresh model).
 """
 
 from __future__ import annotations
@@ -17,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import SchedulingPolicy
 from repro.core.searchplan import Request, SearchPlan
-from repro.core.stagetree import Stage, StageTreeBuilder
+from repro.core.stagetree import Stage, StageTreeBuilder, sibling_groups
 from repro.core.engine.events import EventLoop
 from repro.core.trainer import StageContext, TrainerBackend
 from repro.train.checkpoint import CheckpointStore
@@ -38,7 +49,8 @@ class Dispatcher:
                  events: EventLoop, stats, workers: List[Worker],
                  gpus_per_worker: int = 1,
                  max_steps_per_chain: Optional[int] = None,
-                 builder: Optional[StageTreeBuilder] = None):
+                 builder: Optional[StageTreeBuilder] = None,
+                 batch_siblings: bool = False):
         self.plan = plan
         self.backend = backend
         self.scheduler = scheduler
@@ -49,19 +61,43 @@ class Dispatcher:
         self.gpus_per_worker = gpus_per_worker
         self.max_steps_per_chain = max_steps_per_chain
         self.builder = builder or StageTreeBuilder(plan)
+        self.batch_siblings = batch_siblings
 
     # ------------------------------------------------------------ scheduling
     def assign(self) -> None:
+        # a checkpoint miss mutates the plan (the stale entry is forgotten)
+        # and leaves its requests pending with the worker still idle: re-run
+        # the round so Algorithm 1 re-derives them.  Each retry forgets at
+        # least one stale checkpoint entry, so the loop terminates.
+        while self._assign_round():
+            pass
+
+    def _assign_round(self) -> bool:
+        """One scheduling round; True when a checkpoint miss warrants a
+        retry (idle workers remain and requests were re-derived)."""
         idle = [w for w in self.workers if w.idle]
         if not idle:
-            return
+            return False
         tree = self.builder.build()
         if not tree.stages:
-            return
+            return False
         self.stats.rounds += 1
-        paths = self.scheduler.assign(self.plan, tree, len(idle))
+        missed = False
         # stage_id -> (state, finish_time) for cross-chain chaining this round
         produced: Dict[str, Tuple[Any, float]] = {}
+        taken: set = set()
+
+        if self.batch_siblings:
+            for group in sibling_groups(self.plan, tree):
+                if not idle:
+                    break
+                ran, miss = self._execute_group(group, idle[0], produced,
+                                                taken)
+                missed |= miss
+                if ran:
+                    idle.pop(0)
+
+        paths = self.scheduler.assign(self.plan, tree, len(idle), taken=taken)
         for path, worker in zip(paths, idle):
             if self.max_steps_per_chain:
                 full = path
@@ -70,7 +106,8 @@ class Dispatcher:
                     # refund the cut tail: it reschedules in a later round
                     self.scheduler.on_stages_unassigned(
                         self.plan, full[len(path):])
-            self._execute_chain(path, worker, produced)
+            missed |= self._execute_chain(path, worker, produced)
+        return missed and any(w.idle for w in self.workers)
 
     def _truncate(self, path: List[Stage]) -> List[Stage]:
         out, steps = [], 0
@@ -81,8 +118,42 @@ class Dispatcher:
                 break
         return out
 
+    # ---------------------------------------------------------- resume input
+    def _load_resume(self, nid: str, step: int) -> Optional[Any]:
+        """State of checkpoint (node, step), or None after degrading a
+        vanished checkpoint to recompute: count the miss and make the plan
+        forget the stale entry so the next round re-derives the request.
+        A checkpoint the plan no longer lists (already forgotten earlier
+        this round) is not a fresh miss — one eviction counts once."""
+        cid = self.plan.node(nid).ckpts.get(step)
+        if cid is not None:
+            try:
+                return self.store.get(cid)
+            except KeyError:
+                pass
+            self.stats.ckpt_misses += 1
+            self.plan.forget_ckpt(nid, step)
+        return None
+
+    def _ctx_for(self, st: Stage) -> StageContext:
+        node = self.plan.node(st.node_id)
+        return StageContext(
+            node_id=st.node_id, desc=node.desc, node_start=node.start,
+            start=st.start, stop=st.stop,
+            path_key=self.plan.path_key(st.node_id))
+
+    def _compile_adjusted_wall(self, wall0: float, comp0: float) -> float:
+        """Measured wall minus the backend's compile-time delta: one-time
+        executable compilation must not pollute seconds/step profiles or
+        the virtual clock (it amortizes across the study)."""
+        wall = _time.perf_counter() - wall0
+        comp = getattr(self.backend, "compile_seconds", 0.0) - comp0
+        return max(0.0, wall - comp)
+
+    # ------------------------------------------------------- chain execution
     def _execute_chain(self, path: List[Stage], worker: Worker,
-                       produced: Dict[str, Tuple[Any, float]]) -> None:
+                       produced: Dict[str, Tuple[Any, float]]) -> bool:
+        """Execute one chain; True when a checkpoint miss deferred it."""
         head = path[0]
         t = max(self.events.time, worker.busy_until)
         load_s, save_s = self.backend.overheads()
@@ -90,8 +161,12 @@ class Dispatcher:
         # ------- input state
         if head.resume is not None:
             nid, step = head.resume
-            cid = self.plan.node(nid).ckpts[step]
-            state = self.store.get(cid)
+            state = self._load_resume(nid, step)
+            if state is None:
+                # resume checkpoint externally dropped — leave the requests
+                # pending; the retried round re-derives them from the plan
+                self.scheduler.on_stages_unassigned(self.plan, path)
+                return True
             t += load_s
             self.stats.gpu_seconds += load_s * self.gpus_per_worker
             self.stats.ckpt_loads += 1
@@ -102,7 +177,7 @@ class Dispatcher:
                 worker.idle = True
                 self.stats.chains_deferred += 1
                 self.scheduler.on_stages_unassigned(self.plan, path)
-                return
+                return False
             # produced by another chain in this same round
             state, parent_done = produced[head.parent]
             t = max(t, parent_done) + load_s
@@ -113,18 +188,15 @@ class Dispatcher:
 
         worker.idle = False
         for st in path:
-            node = self.plan.node(st.node_id)
-            ctx = StageContext(
-                node_id=st.node_id, desc=node.desc, node_start=node.start,
-                start=st.start, stop=st.stop,
-                path_key=self.plan.path_key(st.node_id))
+            ctx = self._ctx_for(st)
             self.plan.mark_running([Request(st.node_id, st.stop)])
 
+            comp0 = getattr(self.backend, "compile_seconds", 0.0)
             wall0 = _time.perf_counter()
             if st.steps > 0:
                 state = self.backend.run_stage(state, ctx)
             metrics = self.backend.evaluate(state, ctx) if st.report else None
-            wall = _time.perf_counter() - wall0
+            wall = self._compile_adjusted_wall(wall0, comp0)
 
             sim = self.backend.stage_seconds(ctx)
             dur = sim if sim is not None else wall
@@ -148,3 +220,109 @@ class Dispatcher:
                 "metrics": metrics, "worker": worker.wid,
                 "last": st is path[-1]})
         worker.busy_until = t
+        return False
+
+    # ------------------------------------------------------- group execution
+    def _execute_group(self, group: List[Stage], worker: Worker,
+                       produced: Dict[str, Tuple[Any, float]],
+                       taken: set) -> Tuple[bool, bool]:
+        """Execute a sibling group as one batched backend call on ``worker``.
+
+        Returns ``(ran, missed)``.  Members whose resume checkpoint vanished
+        are refunded to the scheduler and left pending (recompute-on-miss);
+        if fewer than two members survive, the whole group is refunded and
+        its stages fall through to the ordinary chain scheduler this round.
+        """
+        t = max(self.events.time, worker.busy_until)
+        load_s, save_s = self.backend.overheads()
+        missed = False
+        members: List[Stage] = []
+        states: List[Any] = []
+        loaded: Dict[str, Any] = {}   # resume cid -> state (dedup sibling loads)
+        for st in group:
+            self.scheduler.on_path_assigned(self.plan, [st])
+            if st.resume is not None:
+                nid, step = st.resume
+                cid = self.plan.node(nid).ckpts.get(step)
+                state = loaded.get(cid) if cid is not None else None
+                if state is None:
+                    state = self._load_resume(nid, step)
+                    if state is None:
+                        missed = True
+                        self.scheduler.on_stages_unassigned(self.plan, [st])
+                        continue
+                    loaded[cid] = state
+            else:
+                state = self.backend.init_state()
+            members.append(st)
+            states.append(state)
+        if len(members) < 2:
+            # group fell apart — refund survivors; the chain scheduler picks
+            # them up (they are not marked taken)
+            for st in members:
+                self.scheduler.on_stages_unassigned(self.plan, [st])
+            return False, missed
+
+        n_loads = len(loaded)
+        t += load_s * n_loads
+        self.stats.gpu_seconds += load_s * n_loads * self.gpus_per_worker
+        self.stats.ckpt_loads += n_loads
+
+        ctxs = []
+        for st in members:
+            ctxs.append(self._ctx_for(st))
+            taken.add(st.stage_id)
+        self.plan.mark_running([Request(st.node_id, st.stop)
+                                for st in members])
+        worker.idle = False
+
+        comp0 = getattr(self.backend, "compile_seconds", 0.0)
+        wall0 = _time.perf_counter()
+        try:
+            new_states = self.backend.run_stages_batched(states, ctxs)
+            batched = True
+        except ValueError:
+            # in-flight incompatibility (e.g. divergent restored batch
+            # sizes): fall back to member-sequential execution — same
+            # semantics, no batching credit
+            new_states = [self.backend.run_stage(s, c)
+                          for s, c in zip(states, ctxs)]
+            batched = False
+        # evaluation is part of the measured window, as in the chain path
+        metrics_l = [self.backend.evaluate(s, c) if st.report else None
+                     for st, c, s in zip(members, ctxs, new_states)]
+        wall = self._compile_adjusted_wall(wall0, comp0)
+
+        sims = [self.backend.stage_seconds(c) for c in ctxs]
+        dur = wall if any(s is None for s in sims) else sum(sims)
+        entries = []
+        for st, ctx, state, sim in zip(members, ctxs, new_states, sims):
+            if st.report:
+                dur += getattr(self.backend, "eval_seconds", 0.0)
+                self.stats.evals_run += 1
+            dur += save_s  # checkpoint per member at the stage boundary
+            self.stats.ckpt_saves += 1
+            self.stats.stages_run += 1
+            self.stats.steps_run += st.steps
+            if st.steps > 0:
+                per_step = (sim if sim is not None
+                            else wall / len(members)) / st.steps
+                self.plan.record_profile(st.node_id, per_step)
+            entries.append((ctx.path_key, st.stop, state))
+        cids = self.store.put_stacked(entries)
+
+        t += dur
+        self.stats.gpu_seconds += dur * self.gpus_per_worker
+        if batched:
+            self.stats.batched_groups += 1
+            self.stats.batched_stages += len(members)
+
+        for i, (st, state, cid, metrics) in enumerate(
+                zip(members, new_states, cids, metrics_l)):
+            produced[st.stage_id] = (state, t)
+            self.events.push(t, "stage", {
+                "node_id": st.node_id, "stop": st.stop, "cid": cid,
+                "metrics": metrics, "worker": worker.wid,
+                "last": i == len(members) - 1})
+        worker.busy_until = t
+        return True, missed

@@ -97,6 +97,9 @@ class EngineStats:
     ckpt_evictions: int = 0
     rounds: int = 0
     chains_deferred: int = 0  # chains whose in-round input was truncated away
+    batched_groups: int = 0   # sibling groups executed as one backend call
+    batched_stages: int = 0   # stages covered by those groups
+    ckpt_misses: int = 0      # vanished resume ckpts degraded to recompute
 
     @property
     def gpu_hours(self) -> float:
@@ -109,7 +112,8 @@ class ExecutionEngine:
                  scheduler: Optional[SchedulingPolicy] = None,
                  store: Optional[CheckpointStore] = None,
                  share: bool = True,
-                 max_steps_per_chain: Optional[int] = None):
+                 max_steps_per_chain: Optional[int] = None,
+                 batch_siblings: Optional[bool] = None):
         self.plan = plan
         self.backend = backend
         self.workers = [Worker(i) for i in range(n_workers)]
@@ -120,13 +124,20 @@ class ExecutionEngine:
         self.store = CheckpointStore() if store is None else store
         self.share = share
         self.max_steps_per_chain = max_steps_per_chain
+        # sibling-trial batching defaults to whatever the backend supports
+        # (one vmapped/fused call per ready sibling group; see dispatch.py)
+        if batch_siblings is None:
+            batch_siblings = bool(getattr(backend, "supports_batched_stages",
+                                          False))
+        self.batch_siblings = batch_siblings
         self.stats = EngineStats()
         self.events = EventLoop()
         self.builder = StageTreeBuilder(plan)
         self.dispatcher = Dispatcher(
             plan, backend, self.scheduler, self.store, self.events,
             self.stats, self.workers, gpus_per_worker=gpus_per_worker,
-            max_steps_per_chain=max_steps_per_chain, builder=self.builder)
+            max_steps_per_chain=max_steps_per_chain, builder=self.builder,
+            batch_siblings=batch_siblings)
         self.aggregator = Aggregator(plan, self.store, self.stats, self.events)
         self._trials: Dict[str, Trial] = {}
         self._handles: List[StudyHandle] = []

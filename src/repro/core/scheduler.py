@@ -63,13 +63,24 @@ class SchedulingPolicy:
     def on_stages_unassigned(self, plan: SearchPlan,
                              stages: List[Stage]) -> None:
         """Hook invoked by the dispatcher for extracted stages that did NOT
-        execute this round (chain truncation, deferred input) — accounting
+        execute this round (chain truncation, deferred input, a sibling
+        group that fell apart, a vanished resume checkpoint) — accounting
         policies refund them here; they will be re-extracted later."""
 
-    def assign(self, plan: SearchPlan, tree: StageTree,
-               n_paths: int) -> List[List[Stage]]:
-        """Extract up to ``n_paths`` disjoint chains for idle workers."""
-        taken: set = set()
+    def on_round_start(self, plan: SearchPlan, tree: StageTree) -> None:
+        """Hook invoked once per scheduling round before extraction
+        (per-round caches of accounting policies)."""
+
+    def assign(self, plan: SearchPlan, tree: StageTree, n_paths: int,
+               taken: Optional[set] = None) -> List[List[Stage]]:
+        """Extract up to ``n_paths`` disjoint chains for idle workers.
+
+        ``taken`` pre-seeds stages the dispatcher already placed this round
+        (batched sibling groups): they are never re-extracted, and their
+        children qualify as chain heads — chaining off the in-round states
+        the groups produce."""
+        taken = set() if taken is None else taken
+        self.on_round_start(plan, tree)
         out = []
         for _ in range(n_paths):
             p = self.next_path(plan, tree, taken)
@@ -230,13 +241,12 @@ class FairShareScheduler(CriticalPathScheduler):
         # smaller charged usage → higher priority; remaining time tie-break
         return (-least, remaining[stage.stage_id])
 
-    def next_path(self, plan, tree, taken):
-        if not taken or not self._plan_studies:
-            # first extraction of a scheduling round: cache stage → studies
-            # once; later extractions on the same tree reuse it
-            self._plan_studies = {sid: frozenset(self._studies_of(plan, st))
-                                  for sid, st in tree.stages.items()}
-        return super().next_path(plan, tree, taken)
+    def on_round_start(self, plan, tree):
+        # cache stage → studies once per round; every extraction on the same
+        # tree reuses it (rebuilt each round even when the dispatcher seeds
+        # ``taken`` with batched groups)
+        self._plan_studies = {sid: frozenset(self._studies_of(plan, st))
+                              for sid, st in tree.stages.items()}
 
     def _charge(self, plan: SearchPlan, stages: List[Stage],
                 sign: float) -> None:

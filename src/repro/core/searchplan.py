@@ -26,20 +26,26 @@ Per-node fields mirror Figure 6:
   the critical-path scheduler).
 
 Incremental control plane (beyond-paper, semantics-preserving): the plan
-keeps a monotonic ``revision`` counter plus a *change log* of node ids whose
-stage-tree-relevant state (checkpoints, metrics, running marks) mutated, and
-maintains a **pending-request index** so ``pending_requests()`` is O(pending)
-instead of a full node scan.  Consumers like
-:class:`~repro.core.stagetree.StageTreeBuilder` use ``revision`` /
-``changes_since`` to memoize Algorithm-1 resolutions across scheduling
-rounds.  All mutations must therefore go through the plan's methods
-(``submit`` / ``record_result`` / ``mark_running`` / ``clear_running`` /
-``drop_request`` / ``release_trial`` / ``evict_ckpts``) — never poke node
+keeps a monotonic ``revision`` counter plus a **per-node revision map** —
+for each node, the revision of its last stage-tree-relevant mutation
+(checkpoints, metrics, running marks), kept in recency order so
+``changes_since(rev)`` walks only the nodes touched after ``rev``.  Unlike
+the earlier append-only change log this is bounded: at most one entry per
+node ever touched, however long the plan lives.  The plan also maintains a
+**pending-request index** so ``pending_requests()`` is O(pending) instead
+of a full node scan.  Consumers like
+:class:`~repro.core.stagetree.StageTreeBuilder` keep their own frontier
+revision and pass it to ``changes_since`` to memoize Algorithm-1
+resolutions across scheduling rounds.  All mutations must therefore go
+through the plan's methods (``submit`` / ``record_result`` /
+``mark_running`` / ``clear_running`` / ``drop_request`` /
+``release_trial`` / ``evict_ckpts`` / ``forget_ckpt``) — never poke node
 fields directly.
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
@@ -136,25 +142,34 @@ class SearchPlan:
         self.trial_studies: Dict[str, Set[str]] = {}
         # ---- incremental control plane ----
         self.revision = 0                       # bumps on every mutation
-        self._change_log: List[str] = []        # node ids with resolution-
-        #                                         relevant changes, in order
+        # node id -> revision of its last resolution-relevant change, kept in
+        # recency order (most recent last); bounded at one entry per node
+        self._node_rev: "OrderedDict[str, int]" = OrderedDict()
         self._pending: Dict[str, Set[int]] = {}  # node_id -> pending steps
         self._order: Dict[str, int] = {}        # node_id -> creation seq
         self._depth: Dict[str, int] = {}        # node_id -> path length
         self._path_keys: Dict[str, str] = {}    # node_id -> cached path_key
+        self._static_hashes: Dict[str, str] = {}  # node_id -> static-hp hash
 
     # -------------------------------------------------------- change tracking
     def _touch(self, node_id: Optional[str] = None) -> None:
-        """Bump ``revision``; log ``node_id`` when the mutation can change
+        """Bump ``revision``; record ``node_id`` when the mutation can change
         Algorithm-1 resolutions (checkpoints / running marks / metrics)."""
         self.revision += 1
         if node_id is not None:
-            self._change_log.append(node_id)
+            self._node_rev[node_id] = self.revision
+            self._node_rev.move_to_end(node_id)
 
-    def changes_since(self, pos: int) -> Tuple[int, Set[str]]:
-        """(new log position, node ids mutated since ``pos``)."""
-        log = self._change_log
-        return len(log), set(log[pos:])
+    def changes_since(self, rev: int) -> Tuple[int, Set[str]]:
+        """(current revision, node ids with resolution-relevant mutations
+        after revision ``rev``) — O(changed) via the recency-ordered map;
+        callers (the stage-tree builder) keep ``rev`` as their frontier."""
+        dirty: Set[str] = set()
+        for nid, r in reversed(self._node_rev.items()):
+            if r <= rev:
+                break
+            dirty.add(nid)
+        return self.revision, dirty
 
     def _refresh_pending(self, node: PlanNode, step: int) -> None:
         """Re-derive the pending-index membership of one (node, step)."""
@@ -218,6 +233,16 @@ class SearchPlan:
             key = stable_hash({"plan_key": self.key, "path": path})
             self._path_keys[node_id] = key
         return key
+
+    def static_hash(self, node_id: str) -> str:
+        """Content hash of a node's static hps.  Descriptors are immutable,
+        so the hash is computed once and cached — the sibling-grouping pass
+        reads it every scheduling round."""
+        h = self._static_hashes.get(node_id)
+        if h is None:
+            h = stable_hash(self.nodes[node_id].desc.get("static") or {})
+            self._static_hashes[node_id] = h
+        return h
 
     def depth_of(self, node_id: str) -> int:
         """Path length root→node (cached; equals len(path_to_root))."""
@@ -355,6 +380,18 @@ class SearchPlan:
             n.ckpts.clear()
             self._touch(node_id)
         return cids
+
+    def forget_ckpt(self, node_id: str, step: int) -> Optional[str]:
+        """Drop a single checkpoint entry whose blob vanished from the store
+        (external eviction, discovered by the dispatcher at load time):
+        Algorithm 1 must stop resuming there so the request re-derives from
+        whatever remains — an earlier checkpoint, an ancestor, or a fresh
+        model.  Returns the forgotten checkpoint id (None if absent)."""
+        n = self.nodes[node_id]
+        cid = n.ckpts.pop(step, None)
+        if cid is not None:
+            self._touch(node_id)
+        return cid
 
     def studies_of_trial(self, trial_id: str) -> Set[str]:
         return self.trial_studies.get(trial_id, set())

@@ -38,9 +38,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.searchplan import Request, SearchPlan
+from repro.core.values import desc_values
 
 __all__ = ["Stage", "StageTree", "StageTreeBuilder", "build_stage_tree",
-           "stage_trees_equal"]
+           "sibling_groups", "stage_trees_equal"]
 
 
 @dataclass
@@ -179,19 +180,13 @@ def build_stage_tree(plan: SearchPlan) -> StageTree:
     return _emit_tree(plan, lookup, pending)
 
 
-def _emit_tree(plan: SearchPlan, lookup: Dict[Request, tuple],
-               pending: List[Request]) -> StageTree:
-    """Turn resolved requests into the stage forest (Algorithm 1 lines 6-14).
+def _emission_inputs(plan: SearchPlan, lookup: Dict[Request, tuple]
+                     ) -> Dict[str, Dict]:
+    """Per-node cuts/resume derived from resolved lookup entries.
 
-    ``lookup`` iteration order determines stage numbering; callers must pass
-    entries in resolution order (ancestors before the requests that chain to
-    them) so incremental and from-scratch builds emit identical trees.
+    Cuts are the resume step plus every requested step on the node that made
+    it into the lookup table (original or intermediate parent requests).
     """
-    tree = StageTree()
-    pending_set: Set[Request] = set(pending)
-
-    # Per-node cuts: resume step + every requested step on the node that made
-    # it into the lookup table (original or intermediate parent requests).
     by_node: Dict[str, Dict] = {}
     for req, res in lookup.items():
         if res[0] == "defer":
@@ -217,65 +212,156 @@ def _emit_tree(plan: SearchPlan, lookup: Dict[Request, tuple],
                 if prev is not None:
                     info["cuts"].add(prev)
                 info["resume"] = node.start
+    return by_node
 
-    # Nodes reached only through ("parent", ...) have resume=None: they chain
-    # from the parent node's stage ending at node.start.
+
+def _node_segments(plan: SearchPlan, node_id: str, info: Dict,
+                   pending_set: Set[Request]) -> Dict:
+    """Pure per-node emission (Algorithm 1 lines 6-14, node-local part):
+    ordered segment specs independent of global stage numbering, so the
+    incremental builder can cache them across rounds.
+
+    Returns ``{"segs": ((lo, hi, report), ...), "resume_ckpt", "via_parent",
+    "parent_ckpt"}`` — ``lo == hi`` marks the zero-length eval-only stage
+    (checkpoint present at a requested step but metrics missing).
+    """
+    node = plan.node(node_id)
+    resume = info["resume"]
+    anchor = resume if resume is not None else node.start
+    cuts = sorted(c for c in info["cuts"] if c > anchor)
+    resume_ckpt = (node_id, resume) if (
+        resume is not None and resume in node.ckpts) else None
+    via_parent = resume is None and node.parent is not None
+    parent_ckpt = None
+    if via_parent and node.start in plan.node(node.parent).ckpts:
+        # parent resolved to a checkpoint exactly at node.start: load it
+        # (used only when the parent emits no stage ending at node.start)
+        parent_ckpt = (node.parent, node.start)
+    segs: List[Tuple[int, int, bool]] = []
+    if anchor in info["cuts"] and Request(node_id, anchor) in pending_set:
+        segs.append((anchor, anchor, True))
+    lo = anchor
+    for hi in cuts:
+        segs.append((lo, hi, Request(node_id, hi) in pending_set))
+        lo = hi
+    return {"segs": tuple(segs), "resume_ckpt": resume_ckpt,
+            "via_parent": via_parent, "parent_ckpt": parent_ckpt}
+
+
+def _emit_from_segments(plan: SearchPlan, order: List[str],
+                        node_info: Dict[str, Dict]) -> StageTree:
+    """Global numbering/linking pass: instantiate the stage forest from
+    per-node segments, parents before children, in deterministic order."""
+    tree = StageTree()
     made: Dict[Tuple[str, int], str] = {}   # (node_id, stop step) -> stage id
-    done: Set[str] = set()                  # nodes fully emitted
+    done: Set[str] = set()
 
-    def emit_node(node_id: str) -> None:
+    def emit(node_id: str) -> None:
         if node_id in done:
             return
-        info = by_node[node_id]
+        done.add(node_id)
+        info = node_info[node_id]
         node = plan.node(node_id)
-        resume = info["resume"]
-        anchor_step = resume if resume is not None else node.start
-        cuts = sorted(c for c in info["cuts"] if c > anchor_step)
-        prev_stage: Optional[str] = None
-        resume_ckpt = (node_id, resume) if (
-            resume is not None and resume in node.ckpts) else None
+        resume_ckpt = info["resume_ckpt"]
         parent_stage: Optional[str] = None
-        if resume is None and node.parent is not None:
+        if info["via_parent"]:
             # chain after parent node's stage ending at node.start
-            emit_node_if_needed(node.parent)
+            if node.parent in node_info:
+                emit(node.parent)
             parent_stage = made.get((node.parent, node.start))
             if parent_stage is None:
-                # parent resolved to a checkpoint exactly at node.start: load it
-                pnode = plan.node(node.parent)
-                if node.start in pnode.ckpts:
-                    resume_ckpt = (node.parent, node.start)
-        # Checkpoint exists exactly at a requested step but metrics are
-        # missing: emit a zero-length eval-only stage.
-        if (anchor_step in info["cuts"]
-                and Request(node_id, anchor_step) in pending_set):
-            st = tree.new_stage(
-                node_id=node_id, start=anchor_step, stop=anchor_step,
-                resume=resume_ckpt, parent=parent_stage, report=True)
-            made[(node_id, anchor_step)] = st.stage_id
-
-        lo = anchor_step
-        for hi in cuts:
+                resume_ckpt = info["parent_ckpt"]
+        prev_stage: Optional[str] = None
+        for lo, hi, report in info["segs"]:
+            if lo == hi:  # zero-length eval-only stage
+                st = tree.new_stage(
+                    node_id=node_id, start=lo, stop=hi,
+                    resume=resume_ckpt, parent=parent_stage, report=report)
+                made[(node_id, hi)] = st.stage_id
+                continue
             st = tree.new_stage(
                 node_id=node_id, start=lo, stop=hi,
                 resume=resume_ckpt if prev_stage is None else None,
                 parent=prev_stage if prev_stage is not None else parent_stage,
-                report=Request(node_id, hi) in pending_set,
-            )
+                report=report)
             made[(node_id, hi)] = st.stage_id
             prev_stage = st.stage_id
-            lo = hi
-        done.add(node_id)
 
-    def emit_node_if_needed(node_id: str) -> None:
-        if node_id in by_node and node_id not in done:
-            emit_node(node_id)
-
-    # Emit parents before children (requests on ancestors appear in by_node).
-    order = sorted(by_node, key=plan.depth_of)
+    # Emit parents before children (requests on ancestors appear in order).
     for nid in order:
-        emit_node_if_needed(nid)
-
+        emit(nid)
     return tree
+
+
+def _emit_tree(plan: SearchPlan, lookup: Dict[Request, tuple],
+               pending: List[Request]) -> StageTree:
+    """Turn resolved requests into the stage forest (Algorithm 1 lines 6-14).
+
+    ``lookup`` iteration order determines stage numbering; callers must pass
+    entries in resolution order (ancestors before the requests that chain to
+    them) so incremental and from-scratch builds emit identical trees.
+    """
+    pending_set: Set[Request] = set(pending)
+    by_node = _emission_inputs(plan, lookup)
+    order = sorted(by_node, key=plan.depth_of)
+    node_info = {nid: _node_segments(plan, nid, by_node[nid], pending_set)
+                 for nid in order}
+    return _emit_from_segments(plan, order, node_info)
+
+
+# --------------------------------------------------------------------------
+# Sibling-trial batching groups (data-plane helper)
+# --------------------------------------------------------------------------
+
+
+def sibling_groups(plan: SearchPlan, tree: StageTree,
+                   min_size: int = 2) -> List[List[Stage]]:
+    """Ready sibling stages executable as ONE batched backend call.
+
+    A stage qualifies when it is a chain head (no parent stage — its input
+    is a resume checkpoint or a fresh model) with real training work; two
+    such stages group when they train the same ``[start, stop)`` with the
+    same static hyper-parameters (same optimizer — and ``share=False`` trial
+    salts land here, so the trial-based baseline never batches), the same
+    per-step hp names and the same batch-size schedule.  Members then share
+    compiled executable and batch *shapes* and diverge only in hp *values*
+    — exactly what the fused data plane vectorizes over a stacked trial
+    axis (``TrainerBackend.run_stages_batched``).
+
+    Groups preserve stage emission order; stages that fit no group (fewer
+    than ``min_size`` members) are left to the ordinary chain scheduler.
+
+    Two-phase signature: stages first bucket on the cheap structural key
+    (step range, static hps, hp names); only buckets that could actually
+    group materialize the per-step batch-size schedule, so rounds full of
+    ungroupable ready stages never pay O(stage length) per stage.
+    """
+    buckets: Dict[Tuple, List[Stage]] = {}
+    for st in tree.stages.values():
+        if st.parent is not None or st.steps <= 0:
+            continue
+        node = plan.node(st.node_id)
+        sig = (st.start, st.stop, plan.static_hash(st.node_id),
+               tuple(sorted(node.desc["hps"])))
+        buckets.setdefault(sig, []).append(st)
+
+    out: List[List[Stage]] = []
+    for cands in buckets.values():
+        if len(cands) < min_size:
+            continue
+        by_bs: Dict[Optional[Tuple], List[Stage]] = {}
+        for st in cands:
+            node = plan.node(st.node_id)
+            bs_piece = node.desc["hps"].get("bs")
+            if bs_piece is not None:
+                bs = desc_values({"hps": {"bs": bs_piece}}, node.start,
+                                 st.start, st.stop)["bs"]
+                bs_sig: Optional[Tuple] = tuple(int(round(v)) for v in bs)
+            else:
+                bs_sig = None
+            by_bs.setdefault(bs_sig, []).append(st)
+        out.extend(g for g in by_bs.values() if len(g) >= min_size)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -315,9 +401,17 @@ class StageTreeBuilder:
     previous tree is returned as-is (stage trees are read-only to the
     scheduler), making no-op scheduling rounds O(1).
 
+    Emission is incremental too: the emitted forest persists across rounds,
+    and since it is a pure function of the resolved request map and the
+    pending list, a rebuild whose resolutions and pending set come out
+    unchanged returns the previous forest outright — a round whose revision
+    bumped without resolution effect (e.g. a submit that was satisfied
+    immediately, or a no-op kill) re-emits nothing.
+
     Instrumentation: ``builds`` / ``tree_cache_hits`` count full builds vs
     same-revision returns; ``resolves`` / ``resolve_hits`` count Algorithm-1
-    resolutions computed vs served from the memo.
+    resolutions computed vs served from the memo; ``forest_reuses`` counts
+    changed-revision rounds that still reused the emitted forest.
     """
 
     def __init__(self, plan: SearchPlan, verify: bool = False):
@@ -325,14 +419,17 @@ class StageTreeBuilder:
         self.verify = verify
         self._lookup: Dict[Request, tuple] = {}
         self._by_node: Dict[str, Set[Request]] = {}
-        self._log_pos = 0
+        self._seen_rev = 0
         self._cached_revision: Optional[int] = None
         self._cached_tree: Optional[StageTree] = None
+        self._last_active: Optional[Dict[Request, tuple]] = None
+        self._last_pending: Optional[List[Request]] = None
         self.builds = 0
         self.tree_cache_hits = 0
         self.resolves = 0
         self.resolve_hits = 0
         self.invalidated_nodes = 0
+        self.forest_reuses = 0
 
     # ------------------------------------------------------------ invalidation
     def _invalidate(self, dirty: Set[str]) -> None:
@@ -355,7 +452,7 @@ class StageTreeBuilder:
             self.tree_cache_hits += 1
             return self._cached_tree
 
-        self._log_pos, dirty = plan.changes_since(self._log_pos)
+        self._seen_rev, dirty = plan.changes_since(self._seen_rev)
         if dirty:
             self._invalidate(dirty)
 
@@ -382,7 +479,21 @@ class StageTreeBuilder:
             for r in reversed(chain):
                 active[r] = lookup[r]
 
-        tree = _emit_tree(plan, active, pending)
+        # ---- incremental emission: the forest is a pure function of the
+        # resolved request map and the pending list (every plan mutation
+        # that could change emission either changes `pending` or touches a
+        # node, which invalidates and re-resolves the affected entries), so
+        # when both are unchanged the previous forest is returned without
+        # re-emitting — a round whose revision bumped with no resolution
+        # effect (e.g. a submit satisfied immediately) costs no emission ----
+        if (self._cached_tree is not None and active == self._last_active
+                and pending == self._last_pending):
+            tree = self._cached_tree
+            self.forest_reuses += 1
+        else:
+            tree = _emit_tree(plan, active, pending)
+            self._last_active = active
+            self._last_pending = pending
         self._cached_revision = plan.revision
         self._cached_tree = tree
         self.builds += 1

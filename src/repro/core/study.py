@@ -45,10 +45,13 @@ class Study:
                weighted_paths: bool = False,
                policy: Union[str, SchedulingPolicy, None] = None,
                store: Optional[CheckpointStore] = None,
-               max_steps_per_chain: Optional[int] = None) -> ExecutionEngine:
+               max_steps_per_chain: Optional[int] = None,
+               batch_siblings: Optional[bool] = None) -> ExecutionEngine:
         """``policy`` selects the scheduling policy by name ("critical_path",
         "weighted_fanout", "fifo", "fair_share") or instance; the legacy
-        ``weighted_paths`` flag is kept as a shorthand for the default."""
+        ``weighted_paths`` flag is kept as a shorthand for the default.
+        ``batch_siblings`` forces sibling-trial batching on/off (default:
+        whatever the backend supports)."""
         if policy is not None and weighted_paths:
             raise ValueError(
                 "pass either policy=... or the legacy weighted_paths=True "
@@ -65,7 +68,8 @@ class Study:
             gpus_per_worker=gpus_per_worker,
             scheduler=scheduler,
             store=store, share=share,
-            max_steps_per_chain=max_steps_per_chain)
+            max_steps_per_chain=max_steps_per_chain,
+            batch_siblings=batch_siblings)
 
     def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
             **kw) -> EngineStats:

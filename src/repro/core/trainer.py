@@ -18,7 +18,8 @@ Backends:
   stage sharing.
 
 * ``JaxTrainer`` (:mod:`repro.train.jax_trainer`) — real JAX training with
-  per-step hyper-parameter arrays folded into a ``lax.scan``; used by the
+  per-step hyper-parameter arrays folded into whole-stage compiled chunk
+  executables, plus batched execution of sibling-stage groups; used by the
   runnable examples and the losslessness tests.
 """
 
@@ -26,7 +27,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.values import desc_static, desc_values
 
@@ -48,6 +49,12 @@ class StageContext:
 class TrainerBackend:
     """Interface between the execution engine and the training substrate."""
 
+    #: True when :meth:`run_stages_batched` executes a whole sibling group in
+    #: one device call (the dispatcher then runs its grouping pass); the
+    #: default sequential fallback keeps simulated/unfused backends correct
+    #: without pretending they batch.
+    supports_batched_stages: bool = False
+
     def init_state(self) -> Any:
         """Fresh model state (step 0)."""
         raise NotImplementedError
@@ -55,6 +62,16 @@ class TrainerBackend:
     def run_stage(self, state: Any, ctx: StageContext) -> Any:
         """Train from ctx.start to ctx.stop under ctx.desc; return new state."""
         raise NotImplementedError
+
+    def run_stages_batched(self, states: Sequence[Any],
+                           ctxs: Sequence[StageContext]) -> List[Any]:
+        """Execute a group of sibling stages — same ``[start, stop)``, same
+        static hyper-parameters and batch shapes, divergent hp *values* —
+        returning one new state per member.  Backends that can fuse the
+        group into a single compiled call override this (and set
+        ``supports_batched_stages``); the default runs members sequentially,
+        which is always semantically equivalent."""
+        return [self.run_stage(s, c) for s, c in zip(states, ctxs)]
 
     def evaluate(self, state: Any, ctx: StageContext) -> Dict[str, float]:
         """Metrics of the model at ``ctx.stop``."""

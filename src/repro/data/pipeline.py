@@ -61,6 +61,36 @@ class DataPipeline:
         self.cursor += self.batch_size
         return {k: v[idx] for k, v in self.data.items()}
 
+    def next_batches(self, count: int) -> Dict[str, np.ndarray]:
+        """Prefetch ``count`` consecutive batches as one stacked slab.
+
+        Returns ``{field: array[count, batch_size, ...]}`` and advances the
+        pipeline state exactly as ``count`` calls of :meth:`next_batch`
+        would — same permutation walk, same epoch wraps, bit-identical rows
+        — but gathers each run of in-epoch batches with a single fancy
+        index instead of one gather per step.  This is the data slab the
+        fused trainer feeds to a whole-stage executable.
+        """
+        assert self.batch_size <= self.n, (
+            f"batch_size {self.batch_size} exceeds dataset size {self.n}")
+        chunks: Dict[str, list] = {k: [] for k in self.data}
+        remaining = int(count)
+        while remaining > 0:
+            if self.cursor + self.batch_size > self.n:
+                self.epoch += 1
+                self.cursor = 0
+            perm = self._permutation(self.epoch)
+            fit = (self.n - self.cursor) // self.batch_size
+            take = min(remaining, fit)
+            idx = perm[self.cursor:self.cursor + take * self.batch_size]
+            idx = idx.reshape(take, self.batch_size)
+            for k, v in self.data.items():
+                chunks[k].append(v[idx])
+            self.cursor += take * self.batch_size
+            remaining -= take
+        return {k: (c[0] if len(c) == 1 else np.concatenate(c))
+                for k, c in chunks.items()}
+
     def set_batch_size(self, batch_size: int) -> None:
         """§5.1: change batch size mid-study; position is preserved."""
         self.batch_size = int(batch_size)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import io
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,7 +33,7 @@ try:  # jax is always present in this repo, but the store works without it
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
 
-__all__ = ["CheckpointStore"]
+__all__ = ["CheckpointStore", "stack_pytrees", "unstack_pytree"]
 
 
 def _tree_flatten(tree: Any):
@@ -41,6 +41,24 @@ def _tree_flatten(tree: Any):
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         return leaves, treedef
     raise RuntimeError("jax required for pytree checkpoints")
+
+
+# ---------------------------------------------------------------------------
+# stacked-trial helpers (sibling batching)
+# ---------------------------------------------------------------------------
+
+
+def stack_pytrees(trees: Sequence[Any]) -> Any:
+    """Stack structurally-identical array pytrees along a new leading axis
+    (trial axis of a batched sibling group)."""
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_pytree(tree: Any, n: int) -> List[Any]:
+    """Split a leading-axis-stacked pytree back into ``n`` per-trial pytrees
+    (the inverse of :func:`stack_pytrees`)."""
+    return [jax.tree.map(lambda x, g=g: x[g], tree) for g in range(n)]
 
 
 class CheckpointStore:
@@ -72,6 +90,13 @@ class CheckpointStore:
         else:
             self._mem[cid] = tree
         return cid
+
+    def put_stacked(self, entries: Sequence[Tuple[str, int, Any]]) -> List[str]:
+        """Deposit the unstacked results of one batched sibling execution:
+        ``entries`` is ``[(path_key, step, state), ...]`` — one per group
+        member.  Content addressing dedups exactly as per-stage ``put``."""
+        return [self.put(path_key, step, state)
+                for path_key, step, state in entries]
 
     # --------------------------------------------------------------- get
     def get(self, cid: str) -> Any:

@@ -1,25 +1,53 @@
 """Real-training backend: Hippo stages driving a JAX model (the §5.2
-``Trainer`` counterpart).
+``Trainer`` counterpart), with a fused data plane.
 
-``JaxTrainer`` executes a stage by stepping the jitted update once per
-training step, feeding each step its hyper-parameter values from the
-stage's descriptor (the ``setup(hp)`` hot-update of Figure 9 becomes
-"hp values are traced scalar inputs of the compiled step").  Everything a
-resumed trial needs is in the state pytree:
+``JaxTrainer`` executes a whole stage as a handful of *chunk executables*:
+each chunk is one compiled XLA call covering up to ``chunk_steps`` training
+steps, consuming a prefetched data slab (``DataPipeline.next_batches``) and
+stacked per-step hyper-parameter arrays (the ``setup(hp)`` hot-update of
+Figure 9 becomes "hp values are traced inputs of the compiled chunk").
+Compiled executables are cached on ``(opt_name, chunk_len, batch_shape,
+hp structure)``; stage lengths are split into descending power-of-two
+chunks so any length reuses O(log chunk_steps) executables.  Cache misses
+compile ahead-of-time (``jit(...).lower().compile()``) with the time
+recorded in ``compile_seconds``, which the dispatcher subtracts from its
+wall-clock stage measurement — one-time compilation never distorts
+seconds/step profiles (critical-path priorities) or the virtual clock.
+
+The chunk body is a *statically unrolled* scan — semantically
+``lax.scan(step, carry, (hp, slab, steps), unroll=chunk_len)`` with static
+slab indexing.  We deliberately avoid ``lax.scan`` itself: its dynamic
+slicing of the data slab changes XLA:CPU's convolution-gradient codegen by
+1-2 ulps, which would break the bit-exactness contract below.  The carry
+``(params, opt)`` is donated to later chunks on backends that support
+buffer donation (not CPU).
+
+Sibling-trial batching: :meth:`run_stages_batched` executes a whole group
+of sibling stages — same ``[start, stop)``, same static hps and batch-size
+schedule, divergent hp *values* — as ONE compiled call over member-stacked
+carries, hp arrays and data slabs.  The default group executable unrolls
+members statically (bit-exact per member); ``vectorize_groups=True`` swaps
+in ``jax.vmap`` over the member axis, which vectorizes better on real
+accelerators but relaxes bit-exactness to ~1 ulp.
+
+Everything a resumed trial needs is in the state pytree:
 
     {"params", "opt", "data" (pipeline position), "step"}
 
 so stage-based execution is *lossless*: training a prefix once and forking
 the checkpoint yields bit-identical parameters to training each trial
-straight through (asserted by ``tests/test_lossless.py``).
+straight through, and the fused / batched paths are bit-identical to the
+seed per-step loop (kept as :meth:`run_stage_stepwise`) — all asserted by
+``tests/test_lossless.py``.
 
-Batch-size sequences change the batch *shape* → new jit cache entry; the
-compiled-executable cache makes revisiting a size free (DESIGN.md §3(b)).
+Batch-size sequences change the batch *shape* → new executable cache entry;
+revisiting a size is free.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +56,24 @@ import numpy as np
 from repro.core.trainer import StageContext, TrainerBackend
 from repro.core.values import desc_static, desc_values
 from repro.data.pipeline import DataPipeline
+from repro.train.checkpoint import stack_pytrees, unstack_pytree
 from repro.train.optimizer import apply_update, init_opt_state
 
-__all__ = ["JaxTrainer"]
+__all__ = ["JaxTrainer", "chunk_lengths"]
+
+
+def chunk_lengths(n: int, max_chunk: int) -> List[int]:
+    """Split ``n`` steps into descending power-of-two chunk lengths capped at
+    ``max_chunk``, so every stage length reuses O(log max_chunk) compiled
+    executables instead of compiling one per distinct length."""
+    if max_chunk < 1:
+        raise ValueError(f"max_chunk must be >= 1, got {max_chunk}")
+    out: List[int] = []
+    while n > 0:
+        c = min(max_chunk, 1 << (n.bit_length() - 1))
+        out.append(c)
+        n -= c
+    return out
 
 
 class JaxTrainer(TrainerBackend):
@@ -40,15 +83,35 @@ class JaxTrainer(TrainerBackend):
     def __init__(self, task, pipeline_factory: Callable[[], DataPipeline],
                  eval_batch: Dict[str, np.ndarray],
                  default_optimizer: str = "momentum", seed: int = 0,
-                 objective_from: str = "acc"):
+                 objective_from: str = "acc", fused: bool = True,
+                 chunk_steps: int = 8, vectorize_groups: bool = False):
         self.task = task
         self.pipeline_factory = pipeline_factory
         self.eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
         self.default_optimizer = default_optimizer
         self.seed = seed
         self.objective_from = objective_from
-        self._step_fns: Dict[Tuple, Any] = {}
+        self.fused = fused
+        self.chunk_steps = int(chunk_steps)
+        if self.chunk_steps < 1:
+            raise ValueError(f"chunk_steps must be >= 1, got {chunk_steps}")
+        self.vectorize_groups = vectorize_groups
+        self._step_fns: Dict[Tuple, Any] = {}   # stepwise per-step executables
+        self._chunk_fns: Dict[Tuple, Any] = {}  # fused / batched executables
+        # buffer donation frees the carry between chunks; XLA:CPU does not
+        # implement it (and warns per call), so gate on the backend
+        self._donate = jax.default_backend() != "cpu"
         self._eval_fn = jax.jit(self.task.loss)
+        # Cumulative seconds spent AOT-compiling chunk executables.  The
+        # dispatcher subtracts the per-stage delta from its measured wall so
+        # one-time compilation never pollutes seconds/step profiles or the
+        # virtual clock (a deployment amortizes compiles across the study).
+        self.compile_seconds = 0.0
+        self.exec_calls = 0       # compiled-executable dispatches issued
+
+    @property
+    def supports_batched_stages(self) -> bool:  # type: ignore[override]
+        return self.fused
 
     # ------------------------------------------------------------------ state
     def init_state(self) -> Dict[str, Any]:
@@ -62,7 +125,224 @@ class JaxTrainer(TrainerBackend):
             "step": 0,
         }
 
-    # ------------------------------------------------------------- step fn
+    # -------------------------------------------------------------- stage prep
+    def _stage_plan(self, ctx: StageContext):
+        """Per-step value arrays, traced static hps, optimizer, hp names."""
+        vals = desc_values(ctx.desc, ctx.node_start, ctx.start, ctx.stop)
+        static = desc_static(ctx.desc)
+        opt_name = static.get("optimizer", self.default_optimizer)
+        static_hp = {k: float(v) for k, v in static.items()
+                     if isinstance(v, (int, float)) and not k.startswith("_")}
+        names = [k for k in vals if k != "bs"]
+        return vals, static_hp, opt_name, names
+
+    @staticmethod
+    def _bs_runs(vals: Dict[str, List[float]], n: int
+                 ) -> List[Tuple[int, int, Optional[int]]]:
+        """Maximal runs ``[(i0, i1, bs)]`` of constant batch size; ``bs`` is
+        None when the stage has no batch-size sequence (pipeline keeps its
+        restored size)."""
+        if "bs" not in vals:
+            return [(0, n, None)]
+        sizes = [int(round(v)) for v in vals["bs"]]
+        runs, i0 = [], 0
+        for i in range(1, n + 1):
+            if i == n or sizes[i] != sizes[i0]:
+                runs.append((i0, i, sizes[i0]))
+                i0 = i
+        return runs
+
+    @staticmethod
+    def _slab_sig(slab: Dict[str, np.ndarray]) -> Tuple:
+        """Batch shape/dtype signature of a data slab (without the step axis)."""
+        return tuple((k, tuple(v.shape[1:]), str(v.dtype))
+                     for k, v in sorted(slab.items()))
+
+    # ------------------------------------------------------------ executables
+    def _make_chunk_body(self, opt_name: str, n_steps: int):
+        """The fused stage body: ``n_steps`` training steps statically
+        unrolled over the slab/hp/step arrays (see module docstring for why
+        this is not a ``lax.scan``)."""
+        task = self.task
+
+        def chunk(carry, static_hp, hp_xs, slab, steps):
+            params, opt = carry
+            loss = jnp.float32(0)
+            for i in range(n_steps):
+                hp = dict(static_hp)
+                hp.update({k: v[i] for k, v in hp_xs.items()})
+                batch = {k: v[i] for k, v in slab.items()}
+                (loss, _), grads = jax.value_and_grad(
+                    task.loss, has_aux=True)(params, batch)
+                params, opt = apply_update(opt_name, params, grads, opt,
+                                           hp, steps[i])
+            return (params, opt), loss
+
+        return chunk
+
+    def _call_executable(self, key: Tuple, build, donate: bool, args: Tuple):
+        """Invoke the cached executable for ``key``, AOT-compiling on miss.
+
+        Ahead-of-time ``lower().compile()`` (instead of first-call jit
+        compilation) lets compilation time be accounted separately in
+        ``compile_seconds`` — the dispatcher's wall-clock stage timing
+        subtracts it, keeping profiles and virtual time execution-only."""
+        exe = self._chunk_fns.get(key)
+        if exe is None:
+            t0 = time.perf_counter()
+            jitted = jax.jit(build(), donate_argnums=(0,) if donate else ())
+            exe = jitted.lower(*args).compile()
+            self.compile_seconds += time.perf_counter() - t0
+            self._chunk_fns[key] = exe
+        self.exec_calls += 1
+        return exe(*args)
+
+    def _call_fused(self, opt_name: str, n_steps: int, slab_sig: Tuple,
+                    hp_sig: Tuple, donate: bool, args: Tuple):
+        key = ("fused", opt_name, n_steps, slab_sig, hp_sig, donate)
+        return self._call_executable(
+            key, lambda: self._make_chunk_body(opt_name, n_steps), donate,
+            args)
+
+    def _call_group(self, opt_name: str, group: int, n_steps: int,
+                    slab_sig: Tuple, hp_sig: Tuple, shared_slab: bool,
+                    args: Tuple):
+        """``shared_slab``: sibling groups forked from one checkpoint see
+        the same data stream — the slab is gathered once and broadcast to
+        every member inside the executable instead of stacked per member."""
+        key = ("group", opt_name, group, n_steps, slab_sig, hp_sig,
+               shared_slab, self.vectorize_groups)
+
+        def build():
+            chunk = self._make_chunk_body(opt_name, n_steps)
+            if self.vectorize_groups:
+                return jax.vmap(chunk,
+                                in_axes=(0, None, 0, None if shared_slab
+                                         else 0, None))
+
+            def grouped(carry, static_hp, hp_xs, slab, steps):
+                outs, losses = [], []
+                for g in range(group):
+                    member = jax.tree.map(lambda x, g=g: x[g], carry)
+                    hx = {k: v[g] for k, v in hp_xs.items()}
+                    sl = slab if shared_slab else {k: v[g]
+                                                   for k, v in slab.items()}
+                    out, loss = chunk(member, static_hp, hx, sl, steps)
+                    outs.append(out)
+                    losses.append(loss)
+                return stack_pytrees(outs), jnp.stack(losses)
+
+            return grouped
+
+        return self._call_executable(key, build, self._donate, args)
+
+    # -------------------------------------------------------------- execute
+    def run_stage(self, state: Dict[str, Any], ctx: StageContext
+                  ) -> Dict[str, Any]:
+        if not self.fused:
+            return self.run_stage_stepwise(state, ctx)
+        return self._run_fused([state], [ctx])[0]
+
+    def run_stages_batched(self, states: Sequence[Dict[str, Any]],
+                           ctxs: Sequence[StageContext]
+                           ) -> List[Dict[str, Any]]:
+        if not self.fused:
+            return [self.run_stage_stepwise(s, c)
+                    for s, c in zip(states, ctxs)]
+        return self._run_fused(list(states), list(ctxs))
+
+    def _run_fused(self, states: List[Dict[str, Any]],
+                   ctxs: List[StageContext]) -> List[Dict[str, Any]]:
+        group = len(states)
+        ctx0 = ctxs[0]
+        n = ctx0.stop - ctx0.start
+        plans = [self._stage_plan(c) for c in ctxs]
+        vals0, static_hp0, opt_name, names0 = plans[0]
+        runs = self._bs_runs(vals0, n)
+        for c, (vals, static_hp, opt_n, names) in zip(ctxs[1:], plans[1:]):
+            if (c.start, c.stop) != (ctx0.start, ctx0.stop):
+                raise ValueError("batched stages must share [start, stop)")
+            if opt_n != opt_name or static_hp != static_hp0:
+                raise ValueError("batched stages must share static hps")
+            if names != names0:
+                raise ValueError("batched stages must share hp names")
+            if self._bs_runs(vals, n) != runs:
+                raise ValueError("batched stages must share the bs schedule")
+
+        params_l, opt_l = [], []
+        for s, c in zip(states, ctxs):
+            assert s["step"] == c.start, (s["step"], c.start)
+            params_l.append(s["params"])
+            opt = s["opt"]
+            if opt is None or s["opt_name"] != opt_name:
+                opt = init_opt_state(opt_name, s["params"])
+            opt_l.append(opt)
+        # siblings forked from one checkpoint share the data stream: one
+        # pipeline (and one slab, broadcast in-executable) serves them all
+        shared_data = group > 1 and all(
+            tuple(s["data"]) == tuple(states[0]["data"]) for s in states[1:])
+        pipes = []
+        for s in (states[:1] if shared_data else states):
+            pipe = self.pipeline_factory()
+            pipe.restore(s["data"])
+            pipes.append(pipe)
+        if runs and runs[0][2] is None and len(pipes) > 1:
+            if len({p.batch_size for p in pipes}) > 1:
+                raise ValueError("batched stages must share the batch size")
+
+        if group == 1:
+            carry = (params_l[0], opt_l[0])
+        else:
+            carry = (stack_pytrees(params_l), stack_pytrees(opt_l))
+        hp_sig = (tuple(sorted(names0)), tuple(sorted(static_hp0)))
+
+        first = True
+        for i0, i1, bs in runs:
+            if bs is not None:
+                for pipe in pipes:
+                    pipe.set_batch_size(bs)
+            w0 = i0
+            for k_len in chunk_lengths(i1 - i0, self.chunk_steps):
+                w1 = w0 + k_len
+                slabs = [pipe.next_batches(k_len) for pipe in pipes]
+                steps = jnp.arange(ctx0.start + w0, ctx0.start + w1,
+                                   dtype=jnp.int32)
+                if group == 1:
+                    hp_xs = {k: np.asarray(vals0[k][w0:w1], np.float32)
+                             for k in names0}
+                    # never donate the caller's state (it may be a live
+                    # checkpoint); chunks after the first own their carry
+                    carry, _ = self._call_fused(
+                        opt_name, k_len, self._slab_sig(slabs[0]), hp_sig,
+                        self._donate and not first,
+                        (carry, static_hp0, hp_xs, slabs[0], steps))
+                else:
+                    hp_xs = {k: np.asarray([vals[k][w0:w1]
+                                            for vals, _, _, _ in plans],
+                                           np.float32)
+                             for k in names0}
+                    slab = (slabs[0] if shared_data else
+                            {k: np.stack([s[k] for s in slabs])
+                             for k in slabs[0]})
+                    carry, _ = self._call_group(
+                        opt_name, group, k_len, self._slab_sig(slabs[0]),
+                        hp_sig, shared_data,
+                        (carry, static_hp0, hp_xs, slab, steps))
+                first = False
+                w0 = w1
+
+        if group == 1:
+            params_out, opt_out = [carry[0]], [carry[1]]
+        else:
+            params_out = unstack_pytree(carry[0], group)
+            opt_out = unstack_pytree(carry[1], group)
+        datas = ([pipes[0].state()] * group if shared_data
+                 else [p.state() for p in pipes])
+        return [{"params": p, "opt": o, "opt_name": opt_name,
+                 "data": d, "step": ctx0.stop}
+                for p, o, d in zip(params_out, opt_out, datas)]
+
+    # ----------------------------------------------- seed per-step reference
     def _jitted_step(self, opt_name: str):
         key = ("step", opt_name)
         if key not in self._step_fns:
@@ -75,13 +355,14 @@ class JaxTrainer(TrainerBackend):
             self._step_fns[key] = jax.jit(step_fn)
         return self._step_fns[key]
 
-    # -------------------------------------------------------------- execute
-    def run_stage(self, state: Dict[str, Any], ctx: StageContext
-                  ) -> Dict[str, Any]:
+    def run_stage_stepwise(self, state: Dict[str, Any], ctx: StageContext
+                           ) -> Dict[str, Any]:
+        """The seed data plane: one jitted dispatch per training step, batch
+        re-materialized on host each iteration.  Kept as the bit-exactness
+        reference for the fused/batched paths and as the benchmark baseline
+        (``benchmarks/bench_dataplane.py``)."""
         assert state["step"] == ctx.start, (state["step"], ctx.start)
-        vals = desc_values(ctx.desc, ctx.node_start, ctx.start, ctx.stop)
-        static = desc_static(ctx.desc)
-        opt_name = static.get("optimizer", self.default_optimizer)
+        vals, static_hp, opt_name, names = self._stage_plan(ctx)
 
         params = state["params"]
         opt = state["opt"]
@@ -90,12 +371,8 @@ class JaxTrainer(TrainerBackend):
 
         pipe = self.pipeline_factory()
         pipe.restore(state["data"])
-
-        static_hp = {k: float(v) for k, v in static.items()
-                     if isinstance(v, (int, float)) and not k.startswith("_")}
         step_fn = self._jitted_step(opt_name)
 
-        names = [k for k in vals if k != "bs"]
         for i, step in enumerate(range(ctx.start, ctx.stop)):
             if "bs" in vals:
                 pipe.set_batch_size(int(round(vals["bs"][i])))

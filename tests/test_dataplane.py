@@ -1,0 +1,342 @@
+"""Fast JAX data plane: slab prefetch, fused chunks, sibling batching,
+recompute-on-miss, and the compacted incremental control plane.
+
+Bit-exactness of the fused/batched paths on the reference ResNet lives in
+``test_lossless.py``; here a tiny linear task keeps compile times low while
+exercising every data-plane mechanism, plus the control-plane satellites
+(per-node revision map, incremental emission, checkpoint-miss recovery).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Constant, HpConfig, MultiStep, SearchPlanDB, Study,
+                        sibling_groups, build_stage_tree, StageTreeBuilder)
+from repro.core.engine import Tuner
+from repro.core.searchplan import SearchPlan
+from repro.core.trainer import SimulatedTrainer, StageContext
+from repro.core.trial import Trial
+from repro.core.tuners import GridTuner
+from repro.data import DataPipeline
+from repro.train.jax_trainer import JaxTrainer, chunk_lengths
+
+
+# ---------------------------------------------------------------------------
+# tiny reference task (fast to compile)
+# ---------------------------------------------------------------------------
+
+
+class TinyTask:
+    """Linear softmax classifier exposing the ``init``/``loss`` protocol."""
+
+    def __init__(self, dim: int = 16, classes: int = 4):
+        self.dim, self.classes = dim, classes
+
+    def init(self, rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": 0.1 * jax.random.normal(k1, (self.dim, self.classes)),
+                "b": jnp.zeros((self.classes,))}
+
+    def loss(self, params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=1).mean()
+        acc = (jnp.argmax(logits, -1) == batch["y"]).mean()
+        return nll, {"acc": acc}
+
+
+def tiny_dataset(n: int = 128, dim: int = 16, classes: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(0, 1, (n, dim)).astype(np.float32),
+            "y": rng.integers(0, classes, n).astype(np.int32)}
+
+
+def tiny_backend(fused: bool = True, chunk_steps: int = 8, **kw) -> JaxTrainer:
+    data = tiny_dataset()
+    eval_data = tiny_dataset(seed=1)
+    return JaxTrainer(TinyTask(), lambda: DataPipeline(data, batch_size=8,
+                                                       seed=3),
+                      eval_data, default_optimizer="momentum", fused=fused,
+                      chunk_steps=chunk_steps, **kw)
+
+
+def assert_states_identical(a, b):
+    assert a["step"] == b["step"]
+    assert tuple(a["data"]) == tuple(b["data"])
+    for ta, tb in ((a["params"], b["params"]), (a["opt"], b["opt"])):
+        for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# slab prefetch
+# ---------------------------------------------------------------------------
+
+
+def test_next_batches_matches_next_batch_across_epoch_wrap():
+    data = tiny_dataset(n=50)
+    a = DataPipeline(data, batch_size=8, seed=7)
+    b = DataPipeline(data, batch_size=8, seed=7)
+    # 20 batches of 8 over 50 rows: several epoch wraps (6 batches/epoch)
+    slab = a.next_batches(20)
+    singles = [b.next_batch() for _ in range(20)]
+    assert slab["x"].shape == (20, 8, 16)
+    for i, s in enumerate(singles):
+        np.testing.assert_array_equal(slab["x"][i], s["x"])
+        np.testing.assert_array_equal(slab["y"][i], s["y"])
+    assert a.state() == b.state()
+
+
+def test_next_batches_after_batch_size_change():
+    data = tiny_dataset(n=64)
+    a = DataPipeline(data, batch_size=8, seed=7)
+    b = DataPipeline(data, batch_size=8, seed=7)
+    a.next_batches(3)
+    for _ in range(3):
+        b.next_batch()
+    a.set_batch_size(16)
+    b.set_batch_size(16)
+    slab = a.next_batches(5)
+    for i in range(5):
+        s = b.next_batch()
+        np.testing.assert_array_equal(slab["x"][i], s["x"])
+    assert a.state() == b.state()
+
+
+def test_chunk_lengths_power_of_two_cover():
+    assert chunk_lengths(0, 8) == []
+    assert chunk_lengths(13, 8) == [8, 4, 1]
+    assert chunk_lengths(24, 8) == [8, 8, 8]
+    assert chunk_lengths(5, 32) == [4, 1]
+    for n in range(60):
+        assert sum(chunk_lengths(n, 8)) == n
+        assert all(c <= 8 for c in chunk_lengths(n, 8))
+
+
+# ---------------------------------------------------------------------------
+# fused execution — mid-stage bs change
+# ---------------------------------------------------------------------------
+
+
+def test_fused_stage_with_mid_stage_bs_change_is_bitwise_exact():
+    """A bs piece whose value changes *inside* one stage splits the chunk
+    sequence into constant-shape runs (new executable cache entry per
+    shape) and must stay bit-identical to the per-step loop."""
+    fused = tiny_backend(fused=True, chunk_steps=8)
+    stepwise = tiny_backend(fused=False)
+    bs_fn = MultiStep(8, [5], values=[8, 16])
+    desc = {"hps": {"lr": {"kind": "const", "value": 0.1},
+                    "bs": {"kind": bs_fn.kind, "fn": bs_fn.to_json(),
+                           "offset": 0}},
+            "static": {}}
+    ctx = StageContext(node_id="n0", desc=desc, node_start=0, start=0,
+                       stop=12, path_key="pk")
+    out_f = fused.run_stage(fused.init_state(), ctx)
+    out_s = stepwise.run_stage_stepwise(stepwise.init_state(), ctx)
+    assert_states_identical(out_f, out_s)
+    assert out_f["data"][3] == 16
+    shapes = {key[3] for key in fused._chunk_fns if key[0] == "fused"}
+    batch_dims = {dict((k, s) for k, s, _ in sig)["x"][0] for sig in shapes}
+    assert batch_dims == {8, 16}
+
+
+def test_batched_group_equals_solo_fused():
+    """run_stages_batched over divergent-lr siblings == member-by-member
+    fused execution, bit for bit."""
+    backend = tiny_backend()
+    descs = [{"hps": {"lr": {"kind": "const", "value": v}}, "static": {}}
+             for v in (0.1, 0.05, 0.02)]
+    ctxs = [StageContext(f"n{i}", d, 0, 0, 10, f"pk{i}")
+            for i, d in enumerate(descs)]
+    states = [backend.init_state() for _ in ctxs]
+    batched = backend.run_stages_batched(states, ctxs)
+    for st, ctx, got in zip(states, ctxs, batched):
+        solo = backend.run_stage(backend.init_state(), ctx)
+        assert_states_identical(got, solo)
+
+
+# ---------------------------------------------------------------------------
+# sibling grouping
+# ---------------------------------------------------------------------------
+
+
+def sib_trial(tail_lr, total=40):
+    return Trial(HpConfig({"lr": MultiStep(0.1, [20],
+                                           values=[0.1, tail_lr])}), total)
+
+
+def test_sibling_groups_collects_ready_divergent_siblings():
+    plan = SearchPlan()
+    sibs = [sib_trial(v) for v in (0.05, 0.02, 0.01)]
+    for t in sibs:
+        plan.submit(t)
+    other = Trial(HpConfig({"lr": Constant(0.3)}), 60)
+    plan.submit(other)
+
+    # round 1: everything is fresh — the sibling tails chain after their
+    # shared prefix stage, so no ready group exists yet
+    tree = build_stage_tree(plan)
+    assert sibling_groups(plan, tree) == []
+
+    # checkpoint the shared prefix at the fork: the tails become ready
+    # resume stages with identical (start, stop, static, hp names)
+    shared = plan.trial_paths[sibs[0].trial_id][0]
+    assert all(plan.trial_paths[t.trial_id][0] == shared for t in sibs)
+    plan.record_result(shared, 20, "ck@20", None)
+    tree = build_stage_tree(plan)
+    groups = sibling_groups(plan, tree)
+    assert len(groups) == 1
+    group = groups[0]
+    assert len(group) == 3
+    assert {(s.start, s.stop) for s in group} == {(20, 40)}
+    assert all(s.resume == (shared, 20) for s in group)
+
+
+def test_sibling_groups_respects_static_hps():
+    """Different static hps (optimizer choice, share=False trial salts)
+    never group — they would need different executables/state shapes."""
+    plan = SearchPlan()
+    for i, opt in enumerate(["momentum", "momentum", "adam"]):
+        t = Trial(HpConfig({"lr": MultiStep(0.1, [20],
+                                            values=[0.1, 0.01 * (i + 1)])},
+                           {"optimizer": opt}), 40)
+        plan.submit(t)
+        plan.record_result(plan.trial_paths[t.trial_id][0], 20,
+                           f"ck{i}", None)
+    tree = build_stage_tree(plan)
+    groups = sibling_groups(plan, tree)
+    assert len(groups) == 1                     # only the two momentum tails
+    assert len(groups[0]) == 2
+
+
+def test_forced_batching_on_simulator_matches_sequential():
+    """batch_siblings=True on a sequential backend uses the default
+    member-loop run_stages_batched: same results, batching stats count the
+    grouped dispatches."""
+    def run(batch):
+        db = SearchPlanDB()
+        st = Study.create(db, "m", "d", ("lr",))
+        tuner = GridTuner([sib_trial(v) for v in (0.05, 0.02, 0.01)])
+        eng = st.engine(SimulatedTrainer(), n_workers=1,
+                        batch_siblings=batch)
+        stats = eng.run([tuner])
+        plan = db.get(st.key)
+        metrics = sorted(
+            plan.nodes[plan.trial_paths[t.trial_id][-1]].metrics[40]["val_acc"]
+            for t in tuner.trials)
+        return stats, metrics
+
+    s_seq, m_seq = run(False)
+    s_bat, m_bat = run(True)
+    assert s_seq.batched_groups == 0
+    assert s_bat.batched_groups >= 1 and s_bat.batched_stages >= 2
+    assert m_seq == m_bat
+    assert s_seq.steps_run == s_bat.steps_run
+
+
+# ---------------------------------------------------------------------------
+# recompute-on-miss
+# ---------------------------------------------------------------------------
+
+
+class EvictingTuner(Tuner):
+    """Promotes its trial to a second rung after dropping every checkpoint
+    blob from the *store* (behind the plan's back) — the external-eviction
+    scenario the dispatcher must degrade to recompute."""
+
+    def __init__(self, trial, store, evict: bool = True):
+        self.trial = trial
+        self.store = store
+        self.evict = evict
+        self.final_metrics = None
+
+    def start(self, handle):
+        self.handle = handle
+        handle.submit(self.trial, upto=10)
+
+    def on_result(self, trial, step, metrics):
+        if step == 10:
+            if self.evict:
+                for cid in list(self.store._mem):
+                    self.store.evict(cid)
+            self.handle.submit(self.trial, upto=20)
+        elif step == 20:
+            self.final_metrics = metrics
+
+    def is_done(self):
+        return self.final_metrics is not None
+
+
+def test_recompute_on_miss_mid_study():
+    def run(evict):
+        db = SearchPlanDB()
+        st = Study.create(db, "m", "d", ("lr",))
+        eng = st.engine(SimulatedTrainer(), n_workers=2)
+        tuner = EvictingTuner(Trial(HpConfig({"lr": Constant(0.1)}), 20),
+                              eng.store, evict=evict)
+        stats = eng.run([tuner])
+        return stats, tuner.final_metrics
+
+    stats_ok, metrics_ok = run(evict=False)
+    stats_miss, metrics_miss = run(evict=True)
+    assert stats_ok.ckpt_misses == 0
+    assert stats_miss.ckpt_misses == 1     # one eviction counts exactly once
+    # degraded to recompute: the dropped rung-1 checkpoint is retrained
+    assert stats_miss.steps_run == stats_ok.steps_run + 10
+    # ... and the result is exactly what the undisturbed study reports
+    assert metrics_miss == metrics_ok
+
+
+# ---------------------------------------------------------------------------
+# compacted change tracking + incremental emission
+# ---------------------------------------------------------------------------
+
+
+def test_changes_since_is_bounded_and_ordered():
+    plan = SearchPlan()
+    t1 = Trial(HpConfig({"lr": Constant(0.1)}), 100)
+    t2 = Trial(HpConfig({"lr": Constant(0.2)}), 100)
+    plan.submit(t1)
+    plan.submit(t2)
+    n1 = plan.trial_paths[t1.trial_id][-1]
+    n2 = plan.trial_paths[t2.trial_id][-1]
+
+    plan.record_result(n1, 50, "ck", None)
+    rev_after_n1 = plan.revision
+    plan.record_result(n2, 50, "ck", None)
+    plan.record_result(n1, 100, "ck", {"val_acc": 0.5})
+
+    _, dirty_all = plan.changes_since(0)
+    assert dirty_all == {n1, n2}
+    _, dirty_tail = plan.changes_since(rev_after_n1)
+    assert dirty_tail == {n1, n2}
+    rev_now, dirty_none = plan.changes_since(plan.revision)
+    assert rev_now == plan.revision and dirty_none == set()
+
+    # bounded: repeated mutations keep one entry per node, not a log
+    for _ in range(50):
+        plan.record_result(n1, 100, "ck", {"val_acc": 0.5})
+    assert len(plan._node_rev) == 2
+
+
+def test_emission_reused_when_resolutions_unchanged():
+    """A revision bump that changes no resolution (re-submitting an already
+    known trial) must return the cached forest without re-emitting."""
+    plan = SearchPlan()
+    t = Trial(HpConfig({"lr": Constant(0.1)}), 100)
+    plan.submit(t)
+    builder = StageTreeBuilder(plan, verify=True)
+    t1 = builder.build()
+    plan.submit(Trial(HpConfig({"lr": Constant(0.1)}), 100))  # same node
+    t2 = builder.build()
+    assert builder.tree_cache_hits == 0          # revision DID change
+    assert builder.forest_reuses == 1
+    assert t2 is t1
+    plan.submit(Trial(HpConfig({"lr": Constant(0.1)}), 100))
+    assert builder.build() is t1                 # reused again
+    assert builder.forest_reuses == 2
+    # a real change (new divergent trial) must rebuild the forest
+    plan.submit(Trial(HpConfig({"lr": Constant(0.7)}), 100))
+    t3 = builder.build()
+    assert t3 is not t1 and len(t3) == len(t1) + 1

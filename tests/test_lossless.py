@@ -3,6 +3,11 @@
 Training a shared prefix once and forking the checkpoint must produce
 bit-identical parameters and metrics to training every trial straight
 through (real JAX training, deterministic pipeline, CPU floats).
+
+The fused data plane adds two more execution paths — whole-stage chunk
+executables and batched sibling groups — and both must stay bit-identical
+to the seed per-step loop (``run_stage_stepwise``), including across
+mid-chunk batch-size changes that force a fresh executable cache entry.
 """
 
 import jax
@@ -98,3 +103,82 @@ def test_batch_size_change_resumes_pipeline_position(setup):
     assert state["step"] == 16
     assert state["data"][3] == 64              # final batch size
     assert np.isfinite(metrics["loss"])
+
+
+# ---------------------------------------------------------------------------
+# fused data plane: all execution paths bit-identical to the per-step loop
+# ---------------------------------------------------------------------------
+
+
+def assert_states_identical(a, b):
+    assert a["step"] == b["step"]
+    assert tuple(a["data"]) == tuple(b["data"])
+    for tree_a, tree_b in ((a["params"], b["params"]), (a["opt"], b["opt"])):
+        la, lb = jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fused_scan_equals_stepwise_bitwise(setup):
+    """Whole-stage fused execution == seed per-step loop, bit for bit —
+    including a mid-chunk bs change (boundary at step 10, chunk length 8)
+    that re-batches the pipeline and forces a new executable cache entry
+    for the (64, ...) batch shape."""
+    fused = setup
+    assert fused.fused and fused.chunk_steps == 8
+    stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
+                          {k: np.asarray(v) for k, v in fused.eval_batch.items()},
+                          default_optimizer="momentum", fused=False)
+    trials = [
+        Trial(HpConfig({"lr": MultiStep(0.05, [7], values=[0.05, 0.01]),
+                        "bs": Constant(32)}), 19),
+        Trial(HpConfig({"lr": Constant(0.05),
+                        "bs": MultiStep(32, [10], values=[32, 64])}), 16),
+    ]
+    for t in trials:
+        fused_state, fused_metrics = straight_through(fused, t, t.total_steps)
+        step_state, step_metrics = straight_through(stepwise, t, t.total_steps)
+        assert_states_identical(fused_state, step_state)
+        assert fused_metrics == step_metrics
+    # the bs change split the stage into constant-shape runs: one executable
+    # cache entry per batch shape
+    batch_dims = set()
+    for key in fused._chunk_fns:
+        if key[0] == "fused":
+            slab_sig = key[3]
+            batch_dims.add({k: shape for k, shape, _ in slab_sig}["images"][0])
+    assert {32, 64} <= batch_dims
+
+
+def test_batched_siblings_equal_stepwise_bitwise(setup):
+    """Sibling-trial batching: a group of divergent siblings executed as ONE
+    compiled call must reproduce each member's straight-through per-step
+    training exactly."""
+    fused = setup
+    stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
+                          {k: np.asarray(v) for k, v in fused.eval_batch.items()},
+                          default_optimizer="momentum", fused=False)
+    trials = [
+        Trial(HpConfig({"lr": MultiStep(0.05, [12], values=[0.05, v]),
+                        "bs": Constant(32)}), 24)
+        for v in (0.02, 0.01, 0.005)
+    ]
+    db = SearchPlanDB()
+    study = Study.create(db, "resnet8", "synth", ("lr", "bs"))
+    # one worker: the prefix chain carries one sibling tail with it; the
+    # other two meet as ready resume stages and batch as one group
+    eng = study.engine(fused, n_workers=1)
+    stats = eng.run([GridTuner(list(trials))])
+    assert stats.batched_groups >= 1
+    assert stats.batched_stages >= 2
+
+    plan = db.get(study.key)
+    for t in trials:
+        leaf = plan.nodes[plan.trial_paths[t.trial_id][-1]]
+        merged_params = eng.store.get(leaf.ckpts[24])["params"]
+        solo_state, solo_metrics = straight_through(stepwise, t, 24)
+        assert leaf.metrics[24]["loss"] == solo_metrics["loss"]
+        for a, b in zip(jax.tree.leaves(merged_params),
+                        jax.tree.leaves(solo_state["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
