@@ -1,0 +1,13 @@
+"""Distribution plane: mesh-axis sharding rules for params/batches/caches.
+
+``repro.dist.sharding`` maps every assigned architecture's pytrees to
+``PartitionSpec`` trees on the production meshes (see
+:mod:`repro.launch.mesh`) and on local smoke meshes.  Pure tree logic — no
+device allocation happens here.
+"""
+
+from repro.dist.sharding import (MESH_SIZES, ShardingRules, batch_specs,
+                                 cache_specs, param_specs, seq_constrainer)
+
+__all__ = ["MESH_SIZES", "ShardingRules", "batch_specs", "cache_specs",
+           "param_specs", "seq_constrainer"]

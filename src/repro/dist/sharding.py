@@ -1,0 +1,280 @@
+"""Sharding rules: pytree → ``PartitionSpec`` tree for every assigned arch.
+
+The placement vocabulary is four roles mapped onto mesh axes by
+:class:`ShardingRules`:
+
+* ``fsdp`` — fully-sharded data parallelism: weight matrices sharded over
+  the ``data`` axis on their d_model-sized dimension (all-gathered per
+  layer under GSPMD);
+* ``tp``  — tensor parallelism: head / hidden dimensions sharded over the
+  ``model`` axis (whole heads, whole expert-hidden columns);
+* ``dp``  — batch-dimension data parallelism, possibly over several axes
+  (``("pod", "data")`` on the multi-pod mesh);
+* ``pod`` — the cross-pod (DCN) axis; only gradient all-reduce and MoE
+  expert parallelism cross it, so it doubles as the expert-parallel axis
+  on the multi-pod mesh and is ``None`` on a single pod.
+
+Every proposed axis passes a divisibility gate: an axis is dropped
+(replicated) whenever its mesh size does not divide the tensor dimension —
+this is what makes e.g. mamba2's vocab (50280 % 16 != 0) fall back to
+replication while its d_model stays FSDP-sharded, and what lets the same
+rules drive a 1-device smoke mesh (every dimension divides 1).
+
+Spec trees mirror the input tree exactly (``PartitionSpec`` leaves), so
+``jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=...)``
+produces sharding trees for ``jit``'s ``in_shardings`` / ``device_put``.
+Stacked per-cycle parameters (anything under a ``"cycles"`` entry, see
+:class:`repro.models.transformer.LM`) carry one extra leading layer axis,
+which is never sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["MESH_SIZES", "ShardingRules", "param_specs", "batch_specs",
+           "cache_specs", "seq_constrainer", "mesh_sizes_of"]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Production mesh axis sizes (mirrors repro.launch.mesh: single pod
+# (data=16, model=16) = 256 chips, multi-pod adds (pod=2) over DCN).
+MESH_SIZES: Dict[str, int] = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(ax: Axis, sizes: Mapping[str, int]) -> int:
+    """Number of shards an axis entry induces (1 for ``None``; products for
+    multi-axis entries like ``("pod", "data")``)."""
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return math.prod(_axis_size(a, sizes) for a in ax)
+    return sizes[ax]
+
+
+def mesh_sizes_of(mesh) -> Dict[str, int]:
+    """Axis-name → size mapping of a live mesh (for the divisibility gate)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Role → mesh-axis assignment.  ``None`` disables a role (the §Perf
+    hillclimb variants toggle roles via ``dataclasses.replace``)."""
+
+    fsdp: Optional[str] = None
+    tp: Optional[str] = None
+    dp: Tuple[str, ...] = ()
+    seq: Optional[str] = None       # sequence parallelism (residual stream)
+    pod: Optional[str] = None       # DCN axis == expert-parallel axis
+
+    @classmethod
+    def for_mesh(cls, multi_pod: bool) -> "ShardingRules":
+        """Preset for the production meshes: FSDP over ``data``, tensor
+        parallelism over ``model``; the multi-pod mesh adds the ``pod``
+        axis to data parallelism and enables expert parallelism over it."""
+        if multi_pod:
+            return cls(fsdp="data", tp="model", dp=("pod", "data"),
+                       seq=None, pod="pod")
+        return cls(fsdp="data", tp="model", dp=("data",), seq=None, pod=None)
+
+    @property
+    def dp_axis(self) -> Axis:
+        """The batch-dim spec entry: a bare axis name for one axis, a tuple
+        for several, ``None`` when data parallelism is off."""
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def seq_constrainer(rules: ShardingRules):
+    """Residual-stream (B, S, D) sequence-parallel sharding constraint, or
+    ``None`` when ``rules.seq`` is off.  Passed as ``LM(constrain=...)``."""
+    if rules.seq is None:
+        return None
+    dp = rules.dp_axis
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, P(dp, rules.seq, None))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# spec assembly
+# ---------------------------------------------------------------------------
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    """Dict-key names along a ``tree_util`` key path (list indices skipped)."""
+    names = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            names.append(key)
+    return tuple(names)
+
+
+def _spec(leaf, roles: Sequence[Axis], n_lead: int,
+          sizes: Mapping[str, int]) -> P:
+    """Pad ``roles`` to the leaf's rank (leading stack dims and trailing
+    dims replicated) and drop any axis failing the divisibility gate."""
+    axes = [None] * n_lead + list(roles)
+    if len(axes) > leaf.ndim:
+        raise ValueError(f"role tuple {roles} too long for shape {leaf.shape}")
+    axes += [None] * (leaf.ndim - len(axes))
+    gated = [ax if ax is not None and dim % _axis_size(ax, sizes) == 0
+             else None
+             for dim, ax in zip(leaf.shape, axes)]
+    return P(*gated)
+
+
+# ---------------------------------------------------------------------------
+# parameters (and optimizer-state trees, which mirror the param tree)
+# ---------------------------------------------------------------------------
+
+
+def _param_roles(names: Tuple[str, ...], base_rank: int,
+                 rules: ShardingRules) -> Tuple[Axis, ...]:
+    """Placement roles for a parameter leaf, keyed on its dict-path names.
+
+    ``base_rank`` is the leaf rank minus the stacked-cycle dim, which
+    disambiguates the MoE (E, D, F) from the dense (D, F) FFN layout."""
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    fsdp, tp, ep = rules.fsdp, rules.tp, rules.pod
+
+    # top-level tensors (same names inside optimizer-state subtrees)
+    if name == "embed":
+        return (tp, fsdp)                         # (vocab, d_model)
+    if name == "lm_head":
+        return (fsdp, tp)                         # (d_model, vocab)
+    if name == "frontend_proj":
+        return (None, fsdp)                       # (frontend_dim, d_model)
+
+    if parent == "attn":
+        if name in ("wq", "wk", "wv"):
+            return (fsdp, tp, None)               # (D, heads, head_dim)
+        if name == "wo":
+            return (tp, None, fsdp)               # (heads, head_dim, D)
+        if name in ("bq", "bk", "bv"):
+            return (tp, None)
+        return ()                                 # q_norm / k_norm
+
+    if parent in ("ffn", "shared"):
+        if name in ("wi", "wg"):
+            return ((ep, fsdp, tp) if base_rank == 3   # MoE (E, D, F)
+                    else (fsdp, tp))                   # dense (D, F)
+        if name == "wo":
+            return ((ep, tp, fsdp) if base_rank == 3   # MoE (E, F, D)
+                    else (tp, fsdp))                   # dense (F, D)
+        if name == "router":
+            return (fsdp, None)                   # (D, E) — small, fp32
+        return ()
+
+    if parent == "rglru":
+        if name in ("w_in", "w_gate"):
+            return (fsdp, tp)                     # (D, W)
+        if name == "w_out":
+            return (tp, fsdp)                     # (W, D)
+        if name == "conv_w":
+            return (None, tp)                     # (K, W) depthwise conv
+        return ()                                 # lam / g_r
+
+    if parent == "ssm":
+        if name in ("in_z", "in_x"):
+            return (fsdp, tp)                     # (D, inner)
+        if name in ("in_B", "in_C", "in_dt"):
+            return (fsdp, None)                   # B/C/dt small: replicate
+        if name == "conv_x":
+            return (None, tp)                     # (K, inner)
+        if name == "out_proj":
+            return (tp, fsdp)                     # (inner, D)
+        return ()                                 # convs/A_log/D/gate_norm
+
+    return ()                                     # norms and anything unknown
+
+
+def param_specs(shapes: Any, rules: ShardingRules,
+                sizes: Optional[Mapping[str, int]] = None) -> Any:
+    """``PartitionSpec`` tree for an ``LM`` parameter tree (or an optimizer
+    state that mirrors it).  ``shapes`` is any pytree of shaped leaves
+    (``jax.eval_shape`` output or live arrays)."""
+    sizes = MESH_SIZES if sizes is None else sizes
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        n_lead = 1 if "cycles" in names else 0
+        roles = _param_roles(names, leaf.ndim - n_lead, rules)
+        return _spec(leaf, roles, n_lead, sizes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, batch: Any, rules: ShardingRules,
+                sizes: Optional[Mapping[str, int]] = None) -> Any:
+    """Specs for a training/prefill batch struct (see
+    :func:`repro.launch.specs.batch_struct`): batch dim over ``dp``,
+    everything else replicated (sequence parallelism enters via the
+    residual-stream constraint, not the input placement)."""
+    sizes = MESH_SIZES if sizes is None else sizes
+    dp = rules.dp_axis
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name == "positions":                   # (3, B, S) M-RoPE ids
+            return _spec(leaf, (None, dp), 0, sizes)
+        return _spec(leaf, (dp,), 0, sizes)       # tokens/labels/features/...
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, rules: ShardingRules,
+                global_batch: int,
+                sizes: Optional[Mapping[str, int]] = None) -> Any:
+    """Specs for an ``LM.init_cache`` tree: batch dim over ``dp`` (dropped
+    when ``global_batch`` does not divide, e.g. the batch-1 ``long_500k``
+    shape), KV-head / SSM-head / recurrence-width dims over ``tp``."""
+    sizes = MESH_SIZES if sizes is None else sizes
+    dp: Axis = rules.dp_axis
+    if dp is not None and global_batch % _axis_size(dp, sizes) != 0:
+        dp = None
+    tp = rules.tp
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        n_lead = 1 if "cycles" in names else 0
+        if name in ("k", "v"):                    # (B, L, n_kv, head_dim)
+            roles: Tuple[Axis, ...] = (dp, None, tp, None)
+        elif name == "h":                         # RG-LRU state (B, W)
+            roles = (dp, tp)
+        elif name == "state":                     # SSD state (B, H, P, N)
+            roles = (dp, tp, None, None)
+        elif name == "conv":                      # RG-LRU conv (B, K-1, W)
+            roles = (dp, None, tp)
+        elif names[-2:-1] == ("conv",):           # SSD conv streams
+            roles = (dp, None, tp) if name == "x" else (dp, None, None)
+        else:
+            roles = (dp,)
+        return _spec(leaf, roles, n_lead, sizes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

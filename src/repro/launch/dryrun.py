@@ -13,13 +13,8 @@ Usage::
     python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 """
 
-# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
-# locks the device count at first init, so this precedes EVERY other import.
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 import argparse
+import os
 import dataclasses
 import json
 import time
@@ -33,20 +28,23 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (SHAPES, config_for_shape, get_config, list_archs,
                            shape_applicable)
 from repro.dist.sharding import (ShardingRules, batch_specs, cache_specs,
-                                 param_specs)
+                                 mesh_sizes_of, param_specs, seq_constrainer)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.models.transformer import LM
 from repro.train.optimizer import init_opt_state
 from repro.train.step import (build_prefill_step, build_serve_step,
-                              build_train_step)
+                              build_train_step, shardings_for)
 
 __all__ = ["run_case", "main"]
 
+_ns = shardings_for
 
-def _ns(mesh, specs):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                        is_leaf=lambda x: isinstance(x, P))
+
+def _mesh_context(mesh):
+    """``jax.set_mesh`` where available (jax >= 0.6); older releases use the
+    ``Mesh`` object itself as the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
 
 def _collect(lowered, compiled) -> Dict[str, Any]:
@@ -77,12 +75,18 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
              collect_hlo: bool = True, verbose: bool = True,
              use_scan: bool = False,
              cfg_overrides: Optional[Dict[str, Any]] = None,
-             tag: str = "") -> Dict[str, Any]:
-    """Lower + compile one (arch, shape, mesh) case; returns the record."""
+             tag: str = "", reduced: bool = False) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) case; returns the record.
+
+    ``reduced=True`` is the 1-device smoke path: the arch's reduced variant
+    and a shrunk input shape compiled on a local (data=1, model=1) mesh —
+    the structural proof that rules → specs → step wiring is coherent
+    without 512 placeholder devices.
+    """
     shape = SHAPES[shape_name]
     base = get_config(arch)
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
-                           "multi_pod": multi_pod}
+                           "multi_pod": multi_pod, "reduced": reduced}
     if not shape_applicable(base, shape):
         rec["status"] = "skipped"
         rec["reason"] = ("encoder-only: no decode step"
@@ -92,40 +96,41 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = config_for_shape(base, shape)
     if shape.kind == "train":
         cfg = dataclasses.replace(cfg, remat=True)
+    if reduced:
+        if multi_pod:
+            raise ValueError("--reduced runs on the local single mesh")
+        cfg = cfg.reduced()
+        shape = dataclasses.replace(shape, global_batch=4, seq_len=64)
+        collect_hlo = False
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
         rec["cfg_overrides"] = dict(cfg_overrides)
     rec["tag"] = tag
     rec["sliding_window"] = cfg.sliding_window
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (jax.make_mesh((1, 1), ("data", "model")) if reduced
+            else make_production_mesh(multi_pod=multi_pod))
+    sizes = mesh_sizes_of(mesh)
     rules = rules or ShardingRules.for_mesh(multi_pod)
     rec["rules"] = dataclasses.asdict(rules)
-    constrain = None
-    if rules.seq is not None:
-        from jax.sharding import PartitionSpec as _P
-        dp_ = rules.dp if len(rules.dp) > 1 else rules.dp[0]
-
-        def constrain(x, _dp=dp_, _seq=rules.seq):
-            return jax.lax.with_sharding_constraint(x, _P(_dp, _seq, None))
     # unroll → exact per-layer flop accounting (XLA counts a while body
     # once); scan → small HLO for the fast multi-pod sharding-proof pass
-    model = LM(cfg, unroll=not use_scan, constrain=constrain)
+    model = LM(cfg, unroll=not use_scan, constrain=seq_constrainer(rules))
     rec["layer_scan"] = use_scan
 
     t0 = time.time()
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pspecs = param_specs(params_shape, rules)
+    pspecs = param_specs(params_shape, rules, sizes)
     pshard = _ns(mesh, pspecs)
     scalar = NamedSharding(mesh, P())
     kind, kw = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         if kind == "train":
             opt_shape = jax.eval_shape(
                 lambda p: init_opt_state("adamw", p), params_shape)
-            oshard = _ns(mesh, param_specs(opt_shape, rules))
-            bshard = _ns(mesh, batch_specs(cfg, kw["batch"], rules))
+            oshard = _ns(mesh, param_specs(opt_shape, rules, sizes))
+            bshard = _ns(mesh, batch_specs(cfg, kw["batch"], rules, sizes))
             fn = build_train_step(model)
             jf = jax.jit(fn,
                          in_shardings=(pshard, oshard, bshard, scalar, scalar),
@@ -136,15 +141,16 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
                                jax.ShapeDtypeStruct((), jnp.int32))
         elif kind == "prefill":
             fn = build_prefill_step(model)
-            bshard = _ns(mesh, batch_specs(cfg, kw["batch"], rules))
+            bshard = _ns(mesh, batch_specs(cfg, kw["batch"], rules, sizes))
             jf = jax.jit(fn, in_shardings=(pshard, bshard))
             lowered = jf.lower(params_shape, kw["batch"])
         else:  # decode
             cshard = _ns(mesh, cache_specs(cfg, kw["cache"], rules,
-                                           shape.global_batch))
-            dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+                                           shape.global_batch, sizes))
+            dp = rules.dp_axis
             tshard = NamedSharding(
-                mesh, P(dp, None) if shape.global_batch > 1 else P(None, None))
+                mesh, P(dp, None) if shape.global_batch > 1 and dp is not None
+                else P(None, None))
             fn = build_serve_step(model)
             jf = jax.jit(fn, in_shardings=(pshard, cshard, tshard, scalar),
                          out_shardings=(None, cshard), donate_argnums=(1,))
@@ -178,7 +184,9 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["active_params"] = cfg.active_param_count()
     if verbose:
         mem = rec.get("memory", {})
-        print(f"[{arch} × {shape_name} × {'2x16x16' if multi_pod else '16x16'}] "
+        mesh_tag = ("1x1" if reduced else
+                    "2x16x16" if multi_pod else "16x16")
+        print(f"[{arch} × {shape_name} × {mesh_tag}] "
               f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
               f"flops={rec.get('cost', {}).get('flops', float('nan')):.3e} "
               f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
@@ -197,7 +205,22 @@ def main() -> None:
                     help="layer-scan model (fast compile, body-once flops)")
     ap.add_argument("--skip-done", action="store_true",
                     help="skip cases already ok/skipped in --out")
+    ap.add_argument("--reduced", action="store_true",
+                    help="1-device smoke: reduced arch variants on a local "
+                         "(1, 1) mesh, no placeholder devices")
     args = ap.parse_args()
+    if args.reduced and (args.multi_pod or args.both_meshes):
+        ap.error("--reduced runs on the local single mesh")
+    if not args.reduced:
+        # The production dry-run needs 512 placeholder devices.  jax locks
+        # the device count at first backend init (not at import), so this
+        # must precede the first device use below; set here rather than at
+        # module import so merely importing this module never mutates the
+        # process environment (tests import it, and a mutated XLA_FLAGS
+        # would leak into any subprocess they spawn).
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
 
     archs = list_archs() if args.arch is None or args.all else [args.arch]
     cheap_first = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
@@ -210,17 +233,21 @@ def main() -> None:
             for line in f:
                 r = json.loads(line)
                 if r.get("status") in ("ok", "skipped"):
-                    done.add((r["arch"], r["shape"], r["multi_pod"]))
+                    # reduced smoke records must not satisfy full-size
+                    # cases (or vice versa) — the flag is part of the key
+                    done.add((r["arch"], r["shape"], r["multi_pod"],
+                              r.get("reduced", False)))
 
     records = []
     for shape in shapes:
         for arch in archs:
             for mp in meshes:
-                if (arch, shape, mp) in done:
+                if (arch, shape, mp, args.reduced) in done:
                     continue
                 try:
                     rec = run_case(arch, shape, multi_pod=mp,
-                                   use_scan=args.scan or mp)
+                                   use_scan=args.scan or mp,
+                                   reduced=args.reduced)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape, "multi_pod": mp,
                            "status": "error", "error": repr(e),

@@ -5,13 +5,10 @@ sharding/config rules and compare roofline terms against the baseline.
         --variant no-fsdp seqpar --out results/hillclimb.jsonl
 """
 
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 import argparse
 import dataclasses
 import json
+import os
 
 from repro.analysis.roofline import roofline_terms
 from repro.dist.sharding import ShardingRules
@@ -57,6 +54,11 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default="results/hillclimb.jsonl")
     args = ap.parse_args()
+    # 512 placeholder devices for the production meshes; set here (before
+    # the first backend init inside run_case) rather than at import so
+    # importing this module never mutates the process environment
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
     for v in args.variant:
         rec = run_variant(args.arch, args.shape, v, args.multi_pod)

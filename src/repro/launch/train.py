@@ -15,15 +15,15 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.data import DataPipeline, synthetic_lm_dataset
-from repro.dist.sharding import ShardingRules, batch_specs, param_specs
+from repro.dist.sharding import (ShardingRules, batch_specs, mesh_sizes_of,
+                                 param_specs)
+from repro.launch.specs import batch_struct
 from repro.models import LM
 from repro.train.optimizer import init_opt_state
-from repro.train.step import build_train_step
+from repro.train.step import build_train_step, shardings_for
 
 
 def local_mesh():
@@ -67,17 +67,22 @@ def main():
     data = DataPipeline(
         synthetic_lm_dataset(4096, args.seq, cfg.vocab_size), args.batch)
 
-    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                is_leaf=lambda x: isinstance(x, P))
-    pshard = ns(param_specs(jax.eval_shape(lambda: params), rules))
+    ns = lambda t: shardings_for(mesh, t)
+    sizes = mesh_sizes_of(mesh)     # gate divisibility on the live mesh
+    pshard = ns(param_specs(jax.eval_shape(lambda: params), rules, sizes))
     params = jax.device_put(params, pshard)
     opt = jax.device_put(opt, ns(param_specs(jax.eval_shape(lambda: opt),
-                                             rules)))
+                                             rules, sizes)))
+    bshard = ns(batch_specs(cfg, batch_struct(cfg, args.batch, args.seq),
+                            rules, sizes))
 
-    step_fn = jax.jit(build_train_step(model), donate_argnums=(0, 1))
+    # XLA:CPU has no buffer donation (and warns per call) — gate it off
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    step_fn = jax.jit(build_train_step(model), donate_argnums=donate)
     t0 = time.time()
     for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in data.next_batch().items()}, bshard)
         params, opt, loss = step_fn(params, opt, batch,
                                     jnp.float32(args.lr), jnp.int32(i))
         if i % 10 == 0 or i == args.steps - 1:

@@ -14,21 +14,32 @@ recorded in ``compile_seconds``, which the dispatcher subtracts from its
 wall-clock stage measurement — one-time compilation never distorts
 seconds/step profiles (critical-path priorities) or the virtual clock.
 
-The chunk body is a *statically unrolled* scan — semantically
-``lax.scan(step, carry, (hp, slab, steps), unroll=chunk_len)`` with static
-slab indexing.  We deliberately avoid ``lax.scan`` itself: its dynamic
-slicing of the data slab changes XLA:CPU's convolution-gradient codegen by
-1-2 ulps, which would break the bit-exactness contract below.  The carry
-``(params, opt)`` is donated to later chunks on backends that support
-buffer donation (not CPU).
+The chunk body is backend-gated:
+
+* **CPU** — a *statically unrolled* scan, semantically
+  ``lax.scan(step, carry, (hp, slab, steps), unroll=chunk_len)`` with
+  static slab indexing.  We deliberately avoid ``lax.scan`` itself here:
+  its dynamic slicing of the data slab changes XLA:CPU's
+  convolution-gradient codegen by 1-2 ulps, which would break the
+  bit-exactness contract below.
+* **GPU/TPU** — a real ``lax.scan`` over the slab (small HLO, fast
+  compiles, better vectorization), with ``vectorize_groups`` defaulting on
+  so sibling groups run under ``jax.vmap``, and the carry ``(params,
+  opt)`` donated end-to-end between chunks.  Bit-exactness vs the CPU
+  reference relaxes to ~1-2 ulps on these backends.
+
+The gate keys on ``jax.default_backend()``; tests inject ``backend=`` (and
+``donate=False``, since XLA:CPU cannot honor donation) to structure-test
+the accelerator path on the CPU container.
 
 Sibling-trial batching: :meth:`run_stages_batched` executes a whole group
 of sibling stages — same ``[start, stop)``, same static hps and batch-size
 schedule, divergent hp *values* — as ONE compiled call over member-stacked
-carries, hp arrays and data slabs.  The default group executable unrolls
-members statically (bit-exact per member); ``vectorize_groups=True`` swaps
-in ``jax.vmap`` over the member axis, which vectorizes better on real
-accelerators but relaxes bit-exactness to ~1 ulp.
+carries, hp arrays and data slabs.  ``vectorize_groups`` follows the same
+backend gate: off on CPU (members unroll statically, bit-exact per
+member), on for accelerator backends (``jax.vmap`` over the member axis —
+better vectorization, bit-exactness relaxed to ~1 ulp); pass it explicitly
+to override the gate.
 
 Everything a resumed trial needs is in the state pytree:
 
@@ -84,7 +95,10 @@ class JaxTrainer(TrainerBackend):
                  eval_batch: Dict[str, np.ndarray],
                  default_optimizer: str = "momentum", seed: int = 0,
                  objective_from: str = "acc", fused: bool = True,
-                 chunk_steps: int = 8, vectorize_groups: bool = False):
+                 chunk_steps: int = 8,
+                 vectorize_groups: Optional[bool] = None,
+                 backend: Optional[str] = None,
+                 donate: Optional[bool] = None):
         self.task = task
         self.pipeline_factory = pipeline_factory
         self.eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
@@ -95,12 +109,18 @@ class JaxTrainer(TrainerBackend):
         self.chunk_steps = int(chunk_steps)
         if self.chunk_steps < 1:
             raise ValueError(f"chunk_steps must be >= 1, got {chunk_steps}")
-        self.vectorize_groups = vectorize_groups
+        # backend gate (see module docstring).  ``backend`` is injectable so
+        # the accelerator path is structure-testable on the CPU container.
+        self.backend = backend or jax.default_backend()
+        accel = self.backend != "cpu"
+        self.use_scan = accel                   # lax.scan chunk bodies
+        self.vectorize_groups = accel if vectorize_groups is None \
+            else vectorize_groups
         self._step_fns: Dict[Tuple, Any] = {}   # stepwise per-step executables
         self._chunk_fns: Dict[Tuple, Any] = {}  # fused / batched executables
         # buffer donation frees the carry between chunks; XLA:CPU does not
         # implement it (and warns per call), so gate on the backend
-        self._donate = jax.default_backend() != "cpu"
+        self._donate = accel if donate is None else donate
         self._eval_fn = jax.jit(self.task.loss)
         # Cumulative seconds spent AOT-compiling chunk executables.  The
         # dispatcher subtracts the per-stage delta from its measured wall so
@@ -160,10 +180,31 @@ class JaxTrainer(TrainerBackend):
 
     # ------------------------------------------------------------ executables
     def _make_chunk_body(self, opt_name: str, n_steps: int):
-        """The fused stage body: ``n_steps`` training steps statically
-        unrolled over the slab/hp/step arrays (see module docstring for why
-        this is not a ``lax.scan``)."""
+        """The fused stage body: ``n_steps`` training steps over the
+        slab/hp/step arrays.  Statically unrolled on CPU (bit-exact vs the
+        per-step loop), a real ``lax.scan`` on accelerator backends — see
+        the module docstring for the gate's rationale."""
         task = self.task
+
+        if self.use_scan:
+            def chunk(carry, static_hp, hp_xs, slab, steps):
+                def body(c, xs):
+                    hp_i, batch, step = xs
+                    params, opt = c
+                    hp = dict(static_hp)
+                    hp.update(hp_i)
+                    (loss, _), grads = jax.value_and_grad(
+                        task.loss, has_aux=True)(params, batch)
+                    params, opt = apply_update(opt_name, params, grads, opt,
+                                               hp, step)
+                    return (params, opt), loss
+
+                carry, losses = jax.lax.scan(body, carry,
+                                             (hp_xs, slab, steps))
+                return carry, losses[-1]
+
+            chunk.uses_scan = True
+            return chunk
 
         def chunk(carry, static_hp, hp_xs, slab, steps):
             params, opt = carry
@@ -178,6 +219,7 @@ class JaxTrainer(TrainerBackend):
                                            hp, steps[i])
             return (params, opt), loss
 
+        chunk.uses_scan = False
         return chunk
 
     def _call_executable(self, key: Tuple, build, donate: bool, args: Tuple):
@@ -199,7 +241,8 @@ class JaxTrainer(TrainerBackend):
 
     def _call_fused(self, opt_name: str, n_steps: int, slab_sig: Tuple,
                     hp_sig: Tuple, donate: bool, args: Tuple):
-        key = ("fused", opt_name, n_steps, slab_sig, hp_sig, donate)
+        key = ("fused", opt_name, n_steps, slab_sig, hp_sig, donate,
+               self.use_scan)
         return self._call_executable(
             key, lambda: self._make_chunk_body(opt_name, n_steps), donate,
             args)
@@ -211,7 +254,7 @@ class JaxTrainer(TrainerBackend):
         the same data stream — the slab is gathered once and broadcast to
         every member inside the executable instead of stacked per member."""
         key = ("group", opt_name, group, n_steps, slab_sig, hp_sig,
-               shared_slab, self.vectorize_groups)
+               shared_slab, self.vectorize_groups, self.use_scan)
 
         def build():
             chunk = self._make_chunk_body(opt_name, n_steps)

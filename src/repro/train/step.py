@@ -16,27 +16,19 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import (ShardingRules, batch_specs, cache_specs,
-                                 param_specs)
+                                 param_specs, seq_constrainer)
 from repro.models.config import ModelConfig
 from repro.models.transformer import LM
 from repro.train.optimizer import apply_update, init_opt_state
 
 __all__ = ["build_train_step", "build_prefill_step", "build_serve_step",
-           "shardings_for"]
+           "shardings_for", "seq_constrainer"]
 
 
 def shardings_for(mesh, tree_of_specs):
+    """Spec tree → ``NamedSharding`` tree on ``mesh`` (P leaves preserved)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
                         is_leaf=lambda x: isinstance(x, P))
-
-
-def _constrain_seq(x, rules: ShardingRules):
-    """Sequence-parallel constraint on the residual stream (variant knob)."""
-    if rules.seq is None:
-        return x
-    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
-    return jax.lax.with_sharding_constraint(
-        x, P(dp, rules.seq, None))
 
 
 def build_train_step(model: LM, optimizer: str = "adamw"):

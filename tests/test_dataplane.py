@@ -55,6 +55,9 @@ def tiny_dataset(n: int = 128, dim: int = 16, classes: int = 4, seed: int = 0):
 def tiny_backend(fused: bool = True, chunk_steps: int = 8, **kw) -> JaxTrainer:
     data = tiny_dataset()
     eval_data = tiny_dataset(seed=1)
+    # default to the CPU reference path regardless of the host's backend;
+    # the scan-variant tests inject backend="tpu" explicitly
+    kw.setdefault("backend", "cpu")
     return JaxTrainer(TinyTask(), lambda: DataPipeline(data, batch_size=8,
                                                        seed=3),
                       eval_data, default_optimizer="momentum", fused=fused,
@@ -154,6 +157,63 @@ def test_batched_group_equals_solo_fused():
     for st, ctx, got in zip(states, ctxs, batched):
         solo = backend.run_stage(backend.init_state(), ctx)
         assert_states_identical(got, solo)
+
+
+# ---------------------------------------------------------------------------
+# backend-gated fused scan (accelerator path, structure-tested on CPU via
+# backend injection; donate=False because XLA:CPU cannot honor donation)
+# ---------------------------------------------------------------------------
+
+
+def test_backend_gate_defaults():
+    cpu = tiny_backend()                        # container default: CPU
+    assert cpu.backend == "cpu"
+    assert not cpu.use_scan and not cpu.vectorize_groups and not cpu._donate
+    assert cpu._make_chunk_body("momentum", 4).uses_scan is False
+    accel = tiny_backend(backend="tpu", donate=False)
+    assert accel.use_scan and accel.vectorize_groups
+    assert accel._make_chunk_body("momentum", 4).uses_scan is True
+    # explicit knobs still override the gate
+    pinned = tiny_backend(backend="tpu", vectorize_groups=False, donate=False)
+    assert pinned.use_scan and not pinned.vectorize_groups
+
+
+def test_scan_variant_matches_unrolled_numerics():
+    """The lax.scan chunk body must agree with the unrolled CPU reference
+    (to float tolerance — the scan path does not promise bit-exactness)."""
+    ctx = StageContext("n0", {"hps": {"lr": {"kind": "const", "value": 0.1}},
+                              "static": {}}, 0, 0, 13, "pk")
+    unrolled = tiny_backend()
+    scan = tiny_backend(backend="tpu", donate=False)
+    out_u = unrolled.run_stage(unrolled.init_state(), ctx)
+    out_s = scan.run_stage(scan.init_state(), ctx)
+    assert out_s["step"] == out_u["step"] == 13
+    assert tuple(out_s["data"]) == tuple(out_u["data"])
+    for x, y in zip(jax.tree.leaves(out_u["params"]),
+                    jax.tree.leaves(out_s["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+    assert any(k[0] == "fused" and k[-1] for k in scan._chunk_fns)
+
+
+def test_scan_variant_batched_group_matches_unrolled():
+    """Batched siblings on the injected accelerator backend run vmap-over-
+    scan and must match the CPU member-unrolled group to float tolerance."""
+    descs = [{"hps": {"lr": {"kind": "const", "value": v}}, "static": {}}
+             for v in (0.1, 0.05, 0.02)]
+    ctxs = [StageContext(f"n{i}", d, 0, 0, 10, f"pk{i}")
+            for i, d in enumerate(descs)]
+    cpu = tiny_backend()
+    accel = tiny_backend(backend="tpu", donate=False)
+    out_c = cpu.run_stages_batched([cpu.init_state() for _ in ctxs], ctxs)
+    out_a = accel.run_stages_batched([accel.init_state() for _ in ctxs], ctxs)
+    for a, c in zip(out_a, out_c):
+        assert a["step"] == c["step"]
+        for x, y in zip(jax.tree.leaves(c["params"]),
+                        jax.tree.leaves(a["params"])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6)
+    assert any(k[0] == "group" and k[-1] and k[-2] for k in accel._chunk_fns)
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,11 @@ def setup():
     task = ResNet(n=1, width=8)
     def pipe():
         return DataPipeline(data, batch_size=32, seed=3)
-    backend = JaxTrainer(task, pipe, eval_data, default_optimizer="momentum")
+    # pin the CPU reference path: on an accelerator dev box the backend
+    # gate would otherwise swap in the lax.scan body, which only promises
+    # ~1-2 ulp — these tests assert bit equality
+    backend = JaxTrainer(task, pipe, eval_data, default_optimizer="momentum",
+                         backend="cpu")
     return backend
 
 
@@ -129,7 +133,8 @@ def test_fused_scan_equals_stepwise_bitwise(setup):
     assert fused.fused and fused.chunk_steps == 8
     stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
                           {k: np.asarray(v) for k, v in fused.eval_batch.items()},
-                          default_optimizer="momentum", fused=False)
+                          default_optimizer="momentum", fused=False,
+                          backend="cpu")
     trials = [
         Trial(HpConfig({"lr": MultiStep(0.05, [7], values=[0.05, 0.01]),
                         "bs": Constant(32)}), 19),
@@ -158,7 +163,8 @@ def test_batched_siblings_equal_stepwise_bitwise(setup):
     fused = setup
     stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
                           {k: np.asarray(v) for k, v in fused.eval_batch.items()},
-                          default_optimizer="momentum", fused=False)
+                          default_optimizer="momentum", fused=False,
+                          backend="cpu")
     trials = [
         Trial(HpConfig({"lr": MultiStep(0.05, [12], values=[0.05, v]),
                         "bs": Constant(32)}), 24)

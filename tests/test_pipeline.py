@@ -1,10 +1,17 @@
-"""Checkpointable data pipeline (§5.1)."""
+"""Checkpointable data pipeline (§5.1).
+
+The property half needs ``hypothesis``; fixed (bs, warm) grid cases cover
+the same round-trip regardless (one visible skip marks the missing
+randomized half).
+"""
 
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # deterministic fallbacks below still run
+    given = None
 
 from repro.data import DataPipeline, synthetic_cifar, synthetic_lm_dataset
 
@@ -61,9 +68,7 @@ def test_batch_size_change_preserves_position():
     np.testing.assert_array_equal(b16[:8], c.next_batch()["tokens"])
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 16), st.integers(0, 40))
-def test_state_roundtrip_property(bs, warm):
+def _check_state_roundtrip(bs, warm):
     a = make(bs=bs)
     for _ in range(warm):
         a.next_batch()
@@ -72,6 +77,24 @@ def test_state_roundtrip_property(bs, warm):
     b.restore(st_)
     np.testing.assert_array_equal(a.next_batch()["tokens"],
                                   b.next_batch()["tokens"])
+
+
+@pytest.mark.parametrize("bs,warm", [(1, 0), (1, 40), (3, 7), (5, 13),
+                                     (8, 11), (8, 33), (13, 1), (16, 40)])
+def test_state_roundtrip_fixed(bs, warm):
+    """Deterministic grid over the property's (bs, warm) space — runs
+    whether or not hypothesis is installed."""
+    _check_state_roundtrip(bs, warm)
+
+
+if given is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 16), st.integers(0, 40))
+    def test_state_roundtrip_property(bs, warm):
+        _check_state_roundtrip(bs, warm)
+else:
+    def test_state_roundtrip_property():
+        pytest.skip("property half needs hypothesis; fixed grid ran")
 
 
 def test_synthetic_cifar_shapes():

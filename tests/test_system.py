@@ -22,9 +22,11 @@ from repro.train.jax_trainer import JaxTrainer
 def backend():
     data = synthetic_cifar(256, seed=0)
     eval_data = synthetic_cifar(128, seed=1)
+    # backend="cpu" pins the bit-exact unrolled chunk body regardless of
+    # the host's accelerators (determinism assertions below rely on it)
     return JaxTrainer(ResNet(n=1, width=8),
                       lambda: DataPipeline(data, batch_size=32, seed=3),
-                      eval_data, default_optimizer="momentum")
+                      eval_data, default_optimizer="momentum", backend="cpu")
 
 
 def small_space():

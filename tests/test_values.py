@@ -4,36 +4,38 @@ The search plan stores offset-normalized piece descriptors; the trainer
 reconstructs per-step values from them.  This property test guarantees the
 round-trip is exact for every function family and any segmentation — the
 load-bearing invariant behind lossless stage sharing.
+
+The randomized half needs ``hypothesis``; a deterministic corpus covering
+every function family runs regardless (one visible skip marks the missing
+randomized half).
 """
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # deterministic fallbacks below still run
+    given = None
 
 from repro.core.hpseq import (Constant, Cosine, Cyclic, Exponential, HpConfig,
                               Linear, MultiStep, Seq, Warmup)
 from repro.core.trial import Trial
 from repro.core.values import desc_value_at, desc_values
 
-hp_fn = st.one_of(
-    st.builds(Constant, st.floats(0.001, 1.0)),
-    st.builds(lambda b, m: MultiStep(b, sorted(set(m))),
-              st.floats(0.01, 1.0),
-              st.lists(st.integers(1, 90), min_size=1, max_size=3)),
-    st.builds(Exponential, st.floats(0.01, 1.0), st.floats(0.8, 0.999)),
-    st.builds(Linear, st.floats(0.01, 1.0), st.integers(1, 90)),
-    st.builds(Cosine, st.floats(0.01, 1.0), st.integers(1, 90)),
-    st.builds(Cyclic, st.floats(0.0001, 0.01), st.floats(0.05, 0.2),
-              st.integers(5, 30)),
-    st.builds(lambda d, t: Warmup(d, t, Exponential(t, 0.95)),
-              st.integers(1, 20), st.floats(0.01, 0.5)),
-)
+# one representative per function family (the hypothesis strategies sample
+# the same families with randomized parameters)
+FN_CORPUS = [
+    Constant(0.3),
+    MultiStep(0.5, [7, 40]),
+    Exponential(0.8, 0.93),
+    Linear(0.4, 33),
+    Cosine(0.9, 61),
+    Cyclic(0.001, 0.1, 12),
+    Warmup(6, 0.2, Exponential(0.2, 0.95)),
+]
 
 
-@settings(max_examples=60, deadline=None)
-@given(hp_fn, st.integers(5, 100))
-def test_segment_descriptors_reconstruct_values(fn, total):
+def _check_reconstructs(fn, total):
     trial = Trial(HpConfig({"lr": fn}), total)
     for seg in trial.segments():
         vals = desc_values(seg.desc, seg.start, seg.start, seg.stop)["lr"]
@@ -42,10 +44,7 @@ def test_segment_descriptors_reconstruct_values(fn, total):
                 fn, seg.start, step)
 
 
-@settings(max_examples=40, deadline=None)
-@given(hp_fn, hp_fn, st.integers(10, 80), st.integers(5, 40))
-def test_seq_extension_reconstructs(prefix, cont, total, at):
-    """PBT-style Seq((prefix, at), (cont, None)) descriptors reconstruct."""
+def _check_seq_extension(prefix, cont, total, at):
     if at >= total:
         at = total - 1
     f = Seq((prefix, at), (cont, None))
@@ -56,8 +55,51 @@ def test_seq_extension_reconstructs(prefix, cont, total, at):
             assert v == pytest.approx(f.value(step), rel=1e-12)
 
 
+@pytest.mark.parametrize("fn", FN_CORPUS, ids=lambda f: type(f).__name__)
+@pytest.mark.parametrize("total", [5, 37, 100])
+def test_segment_descriptors_reconstruct_values_fixed(fn, total):
+    _check_reconstructs(fn, total)
+
+
+@pytest.mark.parametrize("i", range(len(FN_CORPUS)))
+def test_seq_extension_reconstructs_fixed(i):
+    prefix = FN_CORPUS[i]
+    cont = FN_CORPUS[(i + 3) % len(FN_CORPUS)]
+    _check_seq_extension(prefix, cont, total=60, at=25)
+
+
 def test_static_values_survive():
     trial = Trial(HpConfig({"lr": Constant(0.1)},
                            {"wd": 1e-4, "optimizer": "adam"}), 10)
     seg = trial.segments()[0]
     assert seg.desc["static"] == {"optimizer": "adam", "wd": 1e-4}
+
+
+if given is not None:
+    hp_fn = st.one_of(
+        st.builds(Constant, st.floats(0.001, 1.0)),
+        st.builds(lambda b, m: MultiStep(b, sorted(set(m))),
+                  st.floats(0.01, 1.0),
+                  st.lists(st.integers(1, 90), min_size=1, max_size=3)),
+        st.builds(Exponential, st.floats(0.01, 1.0), st.floats(0.8, 0.999)),
+        st.builds(Linear, st.floats(0.01, 1.0), st.integers(1, 90)),
+        st.builds(Cosine, st.floats(0.01, 1.0), st.integers(1, 90)),
+        st.builds(Cyclic, st.floats(0.0001, 0.01), st.floats(0.05, 0.2),
+                  st.integers(5, 30)),
+        st.builds(lambda d, t: Warmup(d, t, Exponential(t, 0.95)),
+                  st.integers(1, 20), st.floats(0.01, 0.5)),
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(hp_fn, st.integers(5, 100))
+    def test_segment_descriptors_reconstruct_values(fn, total):
+        _check_reconstructs(fn, total)
+
+    @settings(max_examples=40, deadline=None)
+    @given(hp_fn, hp_fn, st.integers(10, 80), st.integers(5, 40))
+    def test_seq_extension_reconstructs(prefix, cont, total, at):
+        """PBT-style Seq((prefix, at), (cont, None)) descriptors reconstruct."""
+        _check_seq_extension(prefix, cont, total, at)
+else:
+    def test_values_property_half():
+        pytest.skip("property half needs hypothesis; fixed corpus ran")
