@@ -1,9 +1,9 @@
 """Data-plane microbenchmark: per-step loop vs fused chunks vs batched
-siblings.
+siblings vs chain-fused multi-stage execution.
 
-Measures training throughput (steps/sec) of the three ``JaxTrainer``
-execution paths on a small reference task where dispatch overhead matters
-(the regime HPO studies actually run tiny proxy models in):
+Measures training throughput (steps/sec) of the ``JaxTrainer`` execution
+paths on a small reference task where dispatch overhead matters (the
+regime HPO studies actually run tiny proxy models in):
 
 * ``stepwise`` — the seed data plane: one jitted dispatch per training
   step, batch re-materialized on host each iteration
@@ -11,25 +11,31 @@ execution paths on a small reference task where dispatch overhead matters
 * ``fused``    — whole-stage chunk executables over a prefetched data slab
   (``run_stage``);
 * ``batched×G`` — G divergent sibling stages executed as ONE compiled call
-  (``run_stages_batched``); throughput counts all G trials' steps.
+  (``run_stages_batched``); throughput counts all G trials' steps;
+* ``per_stage dD`` / ``chain_fused dD`` — a depth-D chain executed the way
+  the dispatcher would: per-stage ``run_stage`` calls with a *synchronous*
+  directory-store ``put`` at every boundary, vs ONE ``run_chain`` call
+  with the carry held on device and every boundary checkpoint deposited
+  *write-behind* (``put_async``; the host commit overlaps the next
+  stage's compute on the background writer thread).
 
-All three produce bit-identical states (asserted here on the first member,
-and exhaustively in ``tests/test_lossless.py``), so the speedup is free.
+All paths produce bit-identical states (asserted here on representative
+members, and exhaustively in ``tests/test_lossless.py``), so the speedup
+is free.
 
-Two scaling metrics for batching: wall-clock ``steps_per_sec`` (on a CPU
-the member computations serialize inside the executable, so this stays
-near the fused rate — real accelerators are where the stacked member axis
-vectorizes) and ``trial_steps_per_dispatch`` (hardware-independent: how
-much training one compiled-call round-trip advances — grows linearly with
-group width, which is what batching buys the control plane: G× fewer
-dispatches, checkpoint loads and scheduling rounds for the same work).
-Rows land in ``BENCH_dataplane.json`` (CI artifact) via ``benchmarks.run``
-or by running this module directly.
+Timing is median-of-``REPEATS`` (single-pass timing made the width curve
+non-monotonic purely from scheduler noise); ``check_dataplane_trend.py``
+gates the committed rows against ``benchmarks/baseline_dataplane.json``
+in CI.  Rows land in ``BENCH_dataplane.json`` (CI artifact) via
+``benchmarks.run`` or by running this module directly.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
+import statistics
+import tempfile
 import time
 
 import jax
@@ -38,6 +44,7 @@ import numpy as np
 
 from repro.core.trainer import StageContext
 from repro.data.pipeline import DataPipeline
+from repro.train.checkpoint import CheckpointStore
 from repro.train.jax_trainer import JaxTrainer
 
 STEPS = 64          # steps per measured stage
@@ -45,7 +52,9 @@ BATCH = 16
 DIM = 32
 CLASSES = 10
 WIDTHS = (2, 4, 8)  # sibling-group sizes
-REPEATS = 3
+REPEATS = 7         # median-of-N (see module docstring)
+CHAIN_DEPTHS = (2, 4)
+CHAIN_STAGE_STEPS = 8    # short stages: the boundary-dominated HPO regime
 
 
 class TinyMLP:
@@ -97,13 +106,83 @@ def ctx_for(lr: float, i: int = 0) -> StageContext:
 
 def timeit(fn, repeats: int = REPEATS) -> float:
     fn()  # warmup: compile + caches
-    best = float("inf")
+    times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
         jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+# ---------------------------------------------------------------------------
+# chain-depth sweep: per-stage dispatch (sync boundary puts) vs run_chain
+# (device-resident carry + write-behind puts)
+# ---------------------------------------------------------------------------
+
+_uniq = itertools.count()
+
+
+def chain_ctx(pk: str, j: int, lr: float = 0.05) -> StageContext:
+    desc = {"hps": {"lr": {"kind": "const", "value": lr}}, "static": {}}
+    return StageContext(node_id=pk, desc=desc, node_start=0,
+                        start=j * CHAIN_STAGE_STEPS,
+                        stop=(j + 1) * CHAIN_STAGE_STEPS, path_key=pk)
+
+
+def chain_rows(fused: JaxTrainer, state0, base: float):
+    """Rows for each chain depth: the dispatcher's former per-stage loop
+    (synchronous directory-store put at every boundary) vs chain-fused
+    execution.  Fresh content-addresses per run keep the store dedup from
+    short-circuiting the writes being measured."""
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        store = CheckpointStore(tmp)
+        for depth in CHAIN_DEPTHS:
+            def run_per_stage(depth=depth):
+                pk = f"ps{next(_uniq)}"
+                state = state0
+                for j in range(depth):
+                    ctx = chain_ctx(pk, j)
+                    state = fused.run_stage(state, ctx)
+                    store.put(pk, ctx.stop, state)
+                return state["params"]
+
+            def run_chain_fused(depth=depth):
+                pk = f"cf{next(_uniq)}"
+                ctxs = [chain_ctx(pk, j) for j in range(depth)]
+                outs = fused.run_chain(state0, ctxs)
+                for ctx, s in zip(ctxs, outs):
+                    store.put_async(pk, ctx.stop, s)
+                return outs[-1]["params"]
+
+            # bit-equality before timing: the chain path must not be a
+            # different computation
+            a, b = run_per_stage(), run_chain_fused()
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+            # drain write-behind backlog between windows: the per-stage
+            # timing must not absorb the chain path's draining commits
+            # (a chain repeat overlapping its own backlog is steady state
+            # and stays in its window)
+            store.flush()
+            t_ps = timeit(run_per_stage)
+            store.flush()
+            t_cf = timeit(run_chain_fused)
+            store.flush()
+            steps = depth * CHAIN_STAGE_STEPS
+            rows.append({"path": f"per_stage d{depth}", "depth": depth,
+                         "steps_per_sec": round(steps / t_ps, 1),
+                         "speedup_vs_stepwise": round((steps / t_ps) / base,
+                                                      2)})
+            rows.append({"path": f"chain_fused d{depth}", "depth": depth,
+                         "steps_per_sec": round(steps / t_cf, 1),
+                         "speedup_vs_stepwise": round((steps / t_cf) / base,
+                                                      2),
+                         "speedup_vs_perstage": round(t_ps / t_cf, 2)})
+        store.flush()
+    return rows
 
 
 def main(csv: bool = True):
@@ -158,17 +237,23 @@ def main(csv: bool = True):
                                                   2),
                      "trial_steps_per_dispatch": round(g * STEPS / n_g, 1)})
 
+    rows.extend(chain_rows(fused, state_f, base))
+
     if csv:
-        keys = list(rows[0])
+        keys = []
+        for r in rows:
+            keys.extend(k for k in r if k not in keys)
         print(",".join(keys))
         for r in rows:
-            print(",".join(str(r[k]) for k in keys))
+            print(",".join(str(r.get(k, "")) for k in keys))
     return rows
 
 
 def dump_json(rows, path: str = "BENCH_dataplane.json") -> None:
     with open(path, "w") as f:
         json.dump({"bench": "dataplane", "steps": STEPS, "batch": BATCH,
+                   "repeats": REPEATS,
+                   "chain_stage_steps": CHAIN_STAGE_STEPS,
                    "rows": rows}, f, indent=2)
     print(f"[wrote {path}]")
 

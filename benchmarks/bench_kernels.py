@@ -7,6 +7,7 @@ TPU Mosaic codegen.
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -70,5 +71,12 @@ def main(csv: bool = True):
     return rows
 
 
+def dump_json(rows, path: str = "BENCH_kernels.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "kernels", "backend": jax.default_backend(),
+                   "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
+
+
 if __name__ == "__main__":
-    main()
+    dump_json(main())

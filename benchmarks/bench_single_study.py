@@ -78,6 +78,10 @@ def main(csv: bool = True):
                                 / stage_stats.end_to_end, 2),
             "best_trial": round(trial_best, 4),
             "best_stage": round(stage_best, 4),
+            # real (wall) seconds spent in store puts/gets — the boundary
+            # cost the chain-fused path hides behind write-behind saves
+            "ckpt_save_s": round(stage_stats.ckpt_save_seconds, 3),
+            "ckpt_load_s": round(stage_stats.ckpt_load_seconds, 3),
         })
     if csv:
         keys = list(rows[0])

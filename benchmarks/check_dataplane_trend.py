@@ -1,0 +1,102 @@
+"""CI perf-trend gate for the data plane (mirrors check_stagetree_trend).
+
+Compares the current ``BENCH_dataplane.json`` against the committed
+baseline (``benchmarks/baseline_dataplane.json``) and fails when:
+
+* the fused throughput regresses more than ``2x`` — normalized by the
+  ``stepwise`` row, a cache-free per-step workload that tracks overall
+  machine speed, so raw steps/sec stay comparable across machines;
+* the batched width rows stop being (noise-gated) monotone: each wider
+  group must keep at least ``WIDTH_NOISE`` of the previous width's
+  steps/sec, and ``trial_steps_per_dispatch`` — a hardware-independent
+  count — must be strictly increasing;
+* chain-fused execution at the deepest measured chain stops beating the
+  per-stage dispatch loop by at least ``CHAIN_FLOOR`` (the committed
+  baseline shows >= 1.5x; the floor leaves noise headroom).  The chain
+  rows are gated ONLY on this same-machine ratio: both sides pay the
+  same store/disk contention, so it stays meaningful under CI load where
+  stepwise-normalized absolute throughput does not (the stepwise
+  calibration is pure compute and cannot see I/O contention).
+
+Usage: ``python benchmarks/check_dataplane_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+THRESHOLD = 2.0      # max normalized throughput regression
+WIDTH_NOISE = 0.6    # wider batched row may dip to 60% of the previous one
+CHAIN_FLOOR = 1.25   # min chain-fused speedup over per-stage at max depth
+
+
+def _row(rows, path: str) -> dict:
+    for r in rows:
+        if r["path"] == path:
+            return r
+    raise SystemExit(f"benchmark row {path!r} missing")
+
+
+def _check_regression(cur, base, path: str, calib: float,
+                      threshold: float) -> None:
+    cur_sps = _row(cur, path)["steps_per_sec"] * calib
+    base_sps = _row(base, path)["steps_per_sec"]
+    ratio = base_sps / cur_sps
+    print(f"{path}: {cur_sps:.0f} steps/s normalized vs baseline "
+          f"{base_sps:.0f} -> ratio {ratio:.2f} (limit {threshold:.1f})")
+    if ratio > threshold:
+        raise SystemExit(
+            f"perf regression: {path} throughput is {ratio:.2f}x below the "
+            f"committed baseline (limit {threshold:.1f}x)")
+
+
+def main(current_path: str = "BENCH_dataplane.json",
+         baseline_path: str = "benchmarks/baseline_dataplane.json",
+         threshold: float = THRESHOLD) -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    calib = (_row(base, "stepwise")["steps_per_sec"]
+             / _row(cur, "stepwise")["steps_per_sec"])
+    print(f"machine calibration x{calib:.2f} (stepwise row)")
+    _check_regression(cur, base, "fused", calib, threshold)
+
+    # ---- batched width rows: noise-gated monotone scaling
+    widths = sorted((r for r in cur if r["path"].startswith("batched x")),
+                    key=lambda r: r["width"])
+    if len(widths) < 2:
+        raise SystemExit("batched width rows missing")
+    for a, b in zip(widths, widths[1:]):
+        if b["steps_per_sec"] < a["steps_per_sec"] * WIDTH_NOISE:
+            raise SystemExit(
+                f"width scaling broke: {b['path']} at {b['steps_per_sec']} "
+                f"steps/s vs {a['path']} at {a['steps_per_sec']} "
+                f"(noise gate {WIDTH_NOISE})")
+        if b["trial_steps_per_dispatch"] <= a["trial_steps_per_dispatch"]:
+            raise SystemExit(
+                f"{b['path']} trial_steps_per_dispatch must exceed "
+                f"{a['path']}'s — dispatch amortization regressed")
+    print(f"width rows monotone within noise gate {WIDTH_NOISE}: "
+          + ", ".join(f"x{r['width']}={r['steps_per_sec']}" for r in widths))
+
+    # ---- chain fusion: must keep beating per-stage dispatch at max depth
+    chains = [r for r in cur if r["path"].startswith("chain_fused")]
+    if not chains:
+        raise SystemExit("chain_fused rows missing")
+    deepest = max(chains, key=lambda r: r["depth"])
+    sp = deepest["speedup_vs_perstage"]
+    print(f"{deepest['path']}: {sp:.2f}x over per-stage dispatch "
+          f"(floor {CHAIN_FLOOR:.2f})")
+    if sp < CHAIN_FLOOR:
+        raise SystemExit(
+            f"chain fusion regressed: {sp:.2f}x over per-stage dispatch at "
+            f"depth {deepest['depth']} (floor {CHAIN_FLOOR:.2f}x)")
+    print("trend OK")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    main(*(argv[:2]))

@@ -3,9 +3,10 @@
 ``PYTHONPATH=src python -m benchmarks.run`` runs everything and prints CSV
 blocks; individual benches are importable modules with ``main()``.  The
 control-plane rows land in ``BENCH_stagetree.json`` (gated against the
-committed baseline by ``check_stagetree_trend.py``) and the data-plane rows
-in ``BENCH_dataplane.json``, so the perf trajectory is tracked across PRs
-(CI uploads both as artifacts).
+committed baseline by ``check_stagetree_trend.py``), the data-plane rows
+in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``) and
+the Pallas kernel rows in ``BENCH_kernels.json``, so the perf trajectory
+is tracked across PRs (CI uploads all three as artifacts).
 """
 
 from __future__ import annotations
@@ -44,6 +45,8 @@ def main() -> None:
             dump_stagetree_json(rows)
         elif mod is bench_dataplane:
             bench_dataplane.dump_json(rows)
+        elif mod is bench_kernels:
+            bench_kernels.dump_json(rows)
 
 
 if __name__ == "__main__":

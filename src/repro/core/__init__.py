@@ -7,7 +7,8 @@ from repro.core.hpseq import (
 from repro.core.trial import Trial
 from repro.core.searchplan import SearchPlan
 from repro.core.stagetree import (StageTreeBuilder, build_stage_tree,
-                                  sibling_groups, stage_trees_equal)
+                                  sibling_chain_groups, sibling_groups,
+                                  stage_trees_equal)
 from repro.core.scheduler import (POLICIES, CriticalPathScheduler,
                                   FIFOScheduler, FairShareScheduler,
                                   SchedulingPolicy, WeightedFanoutScheduler,

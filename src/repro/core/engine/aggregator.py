@@ -11,6 +11,14 @@ touched), the node's checkpoints are evicted from the store and forgotten
 by the plan, so Algorithm 1 stops resolving resumes to them.  Results that
 arrive for already-dead nodes (a kill raced a running stage) are evicted on
 arrival for the same reason.
+
+Chain fusion changes none of this: a fused chain still posts one ``stage``
+event per boundary, so a kill that lands mid-chain sees the completed
+prefix recorded stage by stage and the dead suffix evicted on arrival.
+Under the write-behind checkpoint plane those suffix evictions may hit
+checkpoints whose host commit is still in flight — ``store.evict`` cancels
+the pending write (the bytes are never materialized), which is exactly the
+GC-correct outcome.
 """
 
 from __future__ import annotations

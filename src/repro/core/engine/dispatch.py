@@ -3,15 +3,32 @@
 Each round the dispatcher asks the :class:`~repro.core.stagetree.StageTreeBuilder`
 for the current stage tree (incrementally maintained — O(changed requests),
 not O(plan)), runs its **grouping pass** (when the backend batches sibling
-stages: collect ready siblings with identical step range / static hps /
-batch shapes via :func:`~repro.core.stagetree.sibling_groups` and execute
-each group as ONE batched backend call on one worker), hands the remaining
-tree to the scheduling policy, and executes the extracted chains on idle
-virtual workers: load the resume checkpoint (or chain off a state produced
-earlier in the same round — including states a batched group produced), run
-each stage through the trainer backend, checkpoint at every stage boundary,
-and post a ``stage`` event at the virtual completion time for the
-aggregator.
+stages: collect ready sibling chains with stage-wise identical signatures
+via :func:`~repro.core.stagetree.sibling_chain_groups` and execute each
+group as batched backend calls on one worker), hands the remaining tree to
+the scheduling policy, and executes the extracted chains on idle virtual
+workers.
+
+Chain-fused execution (``chain_fusion``, default on for capable backends):
+a whole scheduler-extracted chain runs through ``backend.run_chain`` — the
+state carry stays on device across stage boundaries, with no
+``store.get``/``store.put`` round-trip and no re-dispatch between
+consecutive stages — and every boundary checkpoint is deposited
+**write-behind** (``store.put_async``: pending cache + background commit),
+so the worker never stalls on checkpoint I/O.  The virtual clock keeps
+stage granularity: the measured chain wall is apportioned over the stages
+by step count (simulated backends keep exact per-stage durations), and a
+``stage`` event still lands per boundary, so aggregation, tuner callbacks,
+kills and GC observe exactly the per-stage event stream of the unfused
+loop.  A kill that lands mid-chain therefore behaves as before: the
+completed prefix's checkpoints are already recorded (pending writes are
+served to readers and cancelled by eviction), the dead suffix is evicted
+on arrival.
+
+Checkpoint-plane accounting: ``ckpt_save_seconds`` / ``ckpt_load_seconds``
+time every store interaction, and the synchronous slice of in-window saves
+is subtracted from measured stage walls exactly like ``compile_seconds`` —
+profiles and the virtual clock stay execution-only.
 
 Recompute-on-miss: a resume checkpoint the plan still lists but the store
 has dropped (external eviction) does not raise — the dispatcher counts a
@@ -28,7 +45,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import SchedulingPolicy
 from repro.core.searchplan import Request, SearchPlan
-from repro.core.stagetree import Stage, StageTreeBuilder, sibling_groups
+from repro.core.stagetree import (Stage, StageTreeBuilder,
+                                  sibling_chain_groups, sibling_groups)
 from repro.core.engine.events import EventLoop
 from repro.core.trainer import StageContext, TrainerBackend
 from repro.train.checkpoint import CheckpointStore
@@ -50,7 +68,8 @@ class Dispatcher:
                  gpus_per_worker: int = 1,
                  max_steps_per_chain: Optional[int] = None,
                  builder: Optional[StageTreeBuilder] = None,
-                 batch_siblings: bool = False):
+                 batch_siblings: bool = False,
+                 chain_fusion: bool = False):
         self.plan = plan
         self.backend = backend
         self.scheduler = scheduler
@@ -62,6 +81,7 @@ class Dispatcher:
         self.max_steps_per_chain = max_steps_per_chain
         self.builder = builder or StageTreeBuilder(plan)
         self.batch_siblings = batch_siblings
+        self.chain_fusion = chain_fusion
 
     # ------------------------------------------------------------ scheduling
     def assign(self) -> None:
@@ -88,7 +108,22 @@ class Dispatcher:
         taken: set = set()
 
         if self.batch_siblings:
-            for group in sibling_groups(self.plan, tree):
+            if self.chain_fusion:
+                # groups extend down parallel chains with identical
+                # per-stage signatures (batched multi-stage chains); the
+                # per-dispatch work cap applies to them like any chain
+                groups = sibling_chain_groups(self.plan, tree)
+                if self.max_steps_per_chain:
+                    # members share per-level step counts, so one member's
+                    # truncation depth bounds the whole group; cut levels
+                    # were never claimed and reschedule in a later round
+                    cuts = [len(self._truncate(g[0])) for g in groups]
+                    groups = [[c[:cut] for c in g]
+                              for g, cut in zip(groups, cuts)]
+            else:
+                groups = [[[st] for st in g]
+                          for g in sibling_groups(self.plan, tree)]
+            for group in groups:
                 if not idle:
                     break
                 ran, miss = self._execute_group(group, idle[0], produced,
@@ -127,13 +162,31 @@ class Dispatcher:
         this round) is not a fresh miss — one eviction counts once."""
         cid = self.plan.node(nid).ckpts.get(step)
         if cid is not None:
+            t0 = _time.perf_counter()
             try:
                 return self.store.get(cid)
             except KeyError:
                 pass
+            finally:
+                self.stats.ckpt_load_seconds += _time.perf_counter() - t0
             self.stats.ckpt_misses += 1
             self.plan.forget_ckpt(nid, step)
         return None
+
+    def _put_boundary(self, path_key: str, stop: int, state: Any) -> str:
+        """Deposit one stage-boundary checkpoint — write-behind under chain
+        fusion (enqueue only; the commit overlaps the next stage's
+        compute), synchronous otherwise.  The synchronous slice is timed
+        into ``ckpt_save_seconds`` either way."""
+        t0 = _time.perf_counter()
+        if self.chain_fusion:
+            cid = self.store.put_async(path_key, stop, state)
+            self.stats.ckpt_async_writes += 1
+        else:
+            cid = self.store.put(path_key, stop, state)
+        self.stats.ckpt_save_seconds += _time.perf_counter() - t0
+        self.stats.ckpt_saves += 1
+        return cid
 
     def _ctx_for(self, st: Stage) -> StageContext:
         node = self.plan.node(st.node_id)
@@ -142,13 +195,20 @@ class Dispatcher:
             start=st.start, stop=st.stop,
             path_key=self.plan.path_key(st.node_id))
 
-    def _compile_adjusted_wall(self, wall0: float, comp0: float) -> float:
-        """Measured wall minus the backend's compile-time delta: one-time
-        executable compilation must not pollute seconds/step profiles or
-        the virtual clock (it amortizes across the study)."""
+    def _adjusted_wall(self, wall0: float, comp0: float,
+                       save0: float) -> float:
+        """Measured wall minus the backend's compile-time delta and the
+        synchronous slice of in-window checkpoint saves: one-time
+        compilation amortizes across the study and write-behind saves
+        overlap the next stage, so neither may pollute seconds/step
+        profiles or the virtual clock."""
         wall = _time.perf_counter() - wall0
         comp = getattr(self.backend, "compile_seconds", 0.0) - comp0
-        return max(0.0, wall - comp)
+        save = self.stats.ckpt_save_seconds - save0
+        return max(0.0, wall - comp - save)
+
+    def _compile_adjusted_wall(self, wall0: float, comp0: float) -> float:
+        return self._adjusted_wall(wall0, comp0, self.stats.ckpt_save_seconds)
 
     # ------------------------------------------------------- chain execution
     def _execute_chain(self, path: List[Stage], worker: Worker,
@@ -187,6 +247,10 @@ class Dispatcher:
             state = self.backend.init_state()
 
         worker.idle = False
+        if self.chain_fusion:
+            self._run_chain_fused(path, worker, state, t, produced)
+            return False
+
         for st in path:
             ctx = self._ctx_for(st)
             self.plan.mark_running([Request(st.node_id, st.stop)])
@@ -204,7 +268,6 @@ class Dispatcher:
                 dur += getattr(self.backend, "eval_seconds", 0.0)
                 self.stats.evals_run += 1
             dur += save_s  # checkpoint at every stage boundary
-            self.stats.ckpt_saves += 1
             t += dur
             self.stats.gpu_seconds += dur * self.gpus_per_worker
             self.stats.stages_run += 1
@@ -213,7 +276,7 @@ class Dispatcher:
             if st.steps > 0:
                 self.plan.record_profile(
                     st.node_id, (sim if sim is not None else wall) / st.steps)
-            cid = self.store.put(ctx.path_key, st.stop, state)
+            cid = self._put_boundary(ctx.path_key, st.stop, state)
             produced[st.stage_id] = (state, t)
             self.events.push(t, "stage", {
                 "node_id": st.node_id, "stop": st.stop, "cid": cid,
@@ -222,45 +285,111 @@ class Dispatcher:
         worker.busy_until = t
         return False
 
+    # ------------------------------------------------- fused chain execution
+    def _run_chain_fused(self, path: List[Stage], worker: Worker,
+                         state: Any, t: float,
+                         produced: Dict[str, Tuple[Any, float]]) -> None:
+        """Execute the whole chain through ``backend.run_chain``: one fused
+        call, device-resident carry across boundaries, write-behind
+        checkpoints — with per-stage events, profiles and virtual durations
+        identical in structure to the unfused loop."""
+        _, save_s = self.backend.overheads()
+        ctxs = [self._ctx_for(st) for st in path]
+        self.plan.mark_running([Request(st.node_id, st.stop) for st in path])
+
+        comp0 = getattr(self.backend, "compile_seconds", 0.0)
+        save0 = self.stats.ckpt_save_seconds
+        wall0 = _time.perf_counter()
+        try:
+            bstates = self.backend.run_chain(state, ctxs)
+            fused = True
+        except ValueError:
+            # in-flight incompatibility: per-stage fallback, same
+            # semantics, no fusion credit
+            fused = False
+            bstates = []
+            for st, ctx in zip(path, ctxs):
+                if st.steps > 0:
+                    state = self.backend.run_stage(state, ctx)
+                bstates.append(state)
+        # boundary checkpoints enter the pending cache here (write-behind);
+        # the enqueue slice is measured and subtracted from the wall below
+        cids = [self._put_boundary(ctx.path_key, st.stop, s)
+                for st, ctx, s in zip(path, ctxs, bstates)]
+        metrics_l = [self.backend.evaluate(s, ctx) if st.report else None
+                     for st, ctx, s in zip(path, ctxs, bstates)]
+        wall = self._adjusted_wall(wall0, comp0, save0)
+
+        sims = [self.backend.stage_seconds(c) for c in ctxs]
+        total_steps = sum(st.steps for st in path)
+        for st, s, cid, metrics, sim in zip(path, bstates, cids, metrics_l,
+                                            sims):
+            share = (wall * st.steps / total_steps if total_steps
+                     else wall / len(path))
+            exec_dur = sim if sim is not None else share
+            if st.steps > 0:
+                self.plan.record_profile(st.node_id, exec_dur / st.steps)
+            dur = exec_dur
+            if st.report:
+                dur += getattr(self.backend, "eval_seconds", 0.0)
+                self.stats.evals_run += 1
+            dur += save_s  # checkpoint at every stage boundary
+            t += dur
+            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.stages_run += 1
+            self.stats.steps_run += st.steps
+            if fused:
+                self.stats.chain_fused_stages += 1
+            produced[st.stage_id] = (s, t)
+            self.events.push(t, "stage", {
+                "node_id": st.node_id, "stop": st.stop, "cid": cid,
+                "metrics": metrics, "worker": worker.wid,
+                "last": st is path[-1]})
+        worker.busy_until = t
+
     # ------------------------------------------------------- group execution
-    def _execute_group(self, group: List[Stage], worker: Worker,
+    def _execute_group(self, group: List[List[Stage]], worker: Worker,
                        produced: Dict[str, Tuple[Any, float]],
                        taken: set) -> Tuple[bool, bool]:
-        """Execute a sibling group as one batched backend call on ``worker``.
+        """Execute a sibling-chain group as batched backend calls on
+        ``worker`` (one call per stage level; depth 1 is the classic
+        sibling-stage group).
 
-        Returns ``(ran, missed)``.  Members whose resume checkpoint vanished
-        are refunded to the scheduler and left pending (recompute-on-miss);
-        if fewer than two members survive, the whole group is refunded and
-        its stages fall through to the ordinary chain scheduler this round.
+        Returns ``(ran, missed)``.  Members whose resume checkpoint
+        vanished are refunded to the scheduler and left pending
+        (recompute-on-miss); if fewer than two members survive, the whole
+        group is refunded and its stages fall through to the ordinary
+        chain scheduler this round.
         """
         t = max(self.events.time, worker.busy_until)
         load_s, save_s = self.backend.overheads()
         missed = False
-        members: List[Stage] = []
+        members: List[List[Stage]] = []
         states: List[Any] = []
         loaded: Dict[str, Any] = {}   # resume cid -> state (dedup sibling loads)
-        for st in group:
-            self.scheduler.on_path_assigned(self.plan, [st])
-            if st.resume is not None:
-                nid, step = st.resume
+        for chain in group:
+            head = chain[0]
+            self.scheduler.on_path_assigned(self.plan, chain)
+            if head.resume is not None:
+                nid, step = head.resume
                 cid = self.plan.node(nid).ckpts.get(step)
                 state = loaded.get(cid) if cid is not None else None
                 if state is None:
                     state = self._load_resume(nid, step)
                     if state is None:
                         missed = True
-                        self.scheduler.on_stages_unassigned(self.plan, [st])
+                        self.scheduler.on_stages_unassigned(self.plan, chain)
                         continue
                     loaded[cid] = state
             else:
                 state = self.backend.init_state()
-            members.append(st)
+            members.append(chain)
             states.append(state)
         if len(members) < 2:
             # group fell apart — refund survivors; the chain scheduler picks
             # them up (they are not marked taken)
-            for st in members:
-                self.scheduler.on_stages_unassigned(self.plan, [st])
+            for chain in members:
+                self.scheduler.on_stages_unassigned(self.plan, chain)
             return False, missed
 
         n_loads = len(loaded)
@@ -268,61 +397,79 @@ class Dispatcher:
         self.stats.gpu_seconds += load_s * n_loads * self.gpus_per_worker
         self.stats.ckpt_loads += n_loads
 
-        ctxs = []
-        for st in members:
-            ctxs.append(self._ctx_for(st))
-            taken.add(st.stage_id)
+        depth = len(members[0])
+        ctx_chains = [[self._ctx_for(st) for st in chain]
+                      for chain in members]
+        for chain in members:
+            for st in chain:
+                taken.add(st.stage_id)
         self.plan.mark_running([Request(st.node_id, st.stop)
-                                for st in members])
+                                for chain in members for st in chain])
         worker.idle = False
 
         comp0 = getattr(self.backend, "compile_seconds", 0.0)
+        save0 = self.stats.ckpt_save_seconds
         wall0 = _time.perf_counter()
         try:
-            new_states = self.backend.run_stages_batched(states, ctxs)
+            if depth == 1:
+                outs = [[s] for s in self.backend.run_stages_batched(
+                    states, [ctxs[0] for ctxs in ctx_chains])]
+            else:
+                outs = self.backend.run_chains_batched(states, ctx_chains)
             batched = True
         except ValueError:
             # in-flight incompatibility (e.g. divergent restored batch
             # sizes): fall back to member-sequential execution — same
             # semantics, no batching credit
-            new_states = [self.backend.run_stage(s, c)
-                          for s, c in zip(states, ctxs)]
+            outs = [self.backend.run_chain(s, ctxs)
+                    for s, ctxs in zip(states, ctx_chains)]
             batched = False
-        # evaluation is part of the measured window, as in the chain path
-        metrics_l = [self.backend.evaluate(s, c) if st.report else None
-                     for st, c, s in zip(members, ctxs, new_states)]
-        wall = self._compile_adjusted_wall(wall0, comp0)
+        # write-behind boundary checkpoints for every (member, stage);
+        # content addressing dedups exactly as per-stage puts
+        cids = [[self._put_boundary(ctx.path_key, st.stop, s)
+                 for st, ctx, s in zip(chain, ctxs, out)]
+                for chain, ctxs, out in zip(members, ctx_chains, outs)]
+        metrics_l = [[self.backend.evaluate(s, ctx) if st.report else None
+                      for st, ctx, s in zip(chain, ctxs, out)]
+                     for chain, ctxs, out in zip(members, ctx_chains, outs)]
+        wall = self._adjusted_wall(wall0, comp0, save0)
 
-        sims = [self.backend.stage_seconds(c) for c in ctxs]
-        dur = wall if any(s is None for s in sims) else sum(sims)
-        entries = []
-        for st, ctx, state, sim in zip(members, ctxs, new_states, sims):
-            if st.report:
-                dur += getattr(self.backend, "eval_seconds", 0.0)
-                self.stats.evals_run += 1
-            dur += save_s  # checkpoint per member at the stage boundary
-            self.stats.ckpt_saves += 1
-            self.stats.stages_run += 1
-            self.stats.steps_run += st.steps
-            if st.steps > 0:
-                per_step = (sim if sim is not None
-                            else wall / len(members)) / st.steps
-                self.plan.record_profile(st.node_id, per_step)
-            entries.append((ctx.path_key, st.stop, state))
-        cids = self.store.put_stacked(entries)
-
-        t += dur
-        self.stats.gpu_seconds += dur * self.gpus_per_worker
+        sims = [[self.backend.stage_seconds(c) for c in ctxs]
+                for ctxs in ctx_chains]
+        total_steps = sum(st.steps for st in members[0])
+        fused_chain = depth > 1 and self.chain_fusion
+        for j in range(depth):
+            level = [chain[j] for chain in members]
+            lvl_sims = [s[j] for s in sims]
+            steps_j = level[0].steps
+            lvl_wall = (wall * steps_j / total_steps if total_steps
+                        else wall / depth)
+            dur = (lvl_wall if any(s is None for s in lvl_sims)
+                   else sum(lvl_sims))
+            for m, st in enumerate(level):
+                if st.report:
+                    dur += getattr(self.backend, "eval_seconds", 0.0)
+                    self.stats.evals_run += 1
+                dur += save_s  # checkpoint per member at the stage boundary
+                self.stats.stages_run += 1
+                self.stats.steps_run += st.steps
+                if fused_chain:
+                    self.stats.chain_fused_stages += 1
+                if st.steps > 0:
+                    per_step = (lvl_sims[m] if lvl_sims[m] is not None
+                                else lvl_wall / len(members)) / st.steps
+                    self.plan.record_profile(st.node_id, per_step)
+            t += dur
+            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            for m, st in enumerate(level):
+                produced[st.stage_id] = (outs[m][j], t)
+                self.events.push(t, "stage", {
+                    "node_id": st.node_id, "stop": st.stop,
+                    "cid": cids[m][j], "metrics": metrics_l[m][j],
+                    "worker": worker.wid,
+                    "last": j == depth - 1 and m == len(members) - 1})
         if batched:
             self.stats.batched_groups += 1
-            self.stats.batched_stages += len(members)
-
-        for i, (st, state, cid, metrics) in enumerate(
-                zip(members, new_states, cids, metrics_l)):
-            produced[st.stage_id] = (state, t)
-            self.events.push(t, "stage", {
-                "node_id": st.node_id, "stop": st.stop, "cid": cid,
-                "metrics": metrics, "worker": worker.wid,
-                "last": i == len(members) - 1})
+            self.stats.batched_stages += len(members) * depth
         worker.busy_until = t
         return True, missed

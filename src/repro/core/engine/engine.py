@@ -15,7 +15,11 @@ components and keeps the seed module's public API:
   either real JAX training (wall-clock measured) or the analytic simulator
   (virtual durations) — and deposit checkpoints/metrics through the
   **aggregator** (:mod:`repro.core.engine.aggregator`) at their virtual
-  completion times,
+  completion times.  Chain-capable backends run whole chains **fused**
+  (device-resident carry across stage boundaries) with **write-behind**
+  boundary checkpoints (``CheckpointStore.put_async``; ``run()`` flushes
+  the store before returning) — per-stage events, metrics and the virtual
+  clock are unchanged,
 * **tuners** observe metrics and submit/kill trials, closing the HPO loop.
 
 Accounting matches the paper's two measurements: ``gpu_seconds`` (sum of
@@ -100,6 +104,10 @@ class EngineStats:
     batched_groups: int = 0   # sibling groups executed as one backend call
     batched_stages: int = 0   # stages covered by those groups
     ckpt_misses: int = 0      # vanished resume ckpts degraded to recompute
+    chain_fused_stages: int = 0   # stages advanced via backend.run_chain(s)
+    ckpt_async_writes: int = 0    # write-behind boundary checkpoints
+    ckpt_save_seconds: float = 0.0  # synchronous slice of store puts
+    ckpt_load_seconds: float = 0.0  # store gets (resume loads)
 
     @property
     def gpu_hours(self) -> float:
@@ -113,7 +121,8 @@ class ExecutionEngine:
                  store: Optional[CheckpointStore] = None,
                  share: bool = True,
                  max_steps_per_chain: Optional[int] = None,
-                 batch_siblings: Optional[bool] = None):
+                 batch_siblings: Optional[bool] = None,
+                 chain_fusion: Optional[bool] = None):
         self.plan = plan
         self.backend = backend
         self.workers = [Worker(i) for i in range(n_workers)]
@@ -130,6 +139,13 @@ class ExecutionEngine:
             batch_siblings = bool(getattr(backend, "supports_batched_stages",
                                           False))
         self.batch_siblings = batch_siblings
+        # chain fusion (device-resident carries across stage boundaries +
+        # write-behind boundary checkpoints) defaults to backend support;
+        # unlike batch_siblings, forcing True cannot override a backend
+        # without run_chain support — there is no correct way to fuse it
+        supported = bool(getattr(backend, "supports_chain_fusion", False))
+        self.chain_fusion = (supported if chain_fusion is None
+                             else chain_fusion and supported)
         self.stats = EngineStats()
         self.events = EventLoop()
         self.builder = StageTreeBuilder(plan)
@@ -137,7 +153,7 @@ class ExecutionEngine:
             plan, backend, self.scheduler, self.store, self.events,
             self.stats, self.workers, gpus_per_worker=gpus_per_worker,
             max_steps_per_chain=max_steps_per_chain, builder=self.builder,
-            batch_siblings=batch_siblings)
+            batch_siblings=batch_siblings, chain_fusion=self.chain_fusion)
         self.aggregator = Aggregator(plan, self.store, self.stats, self.events)
         self._trials: Dict[str, Trial] = {}
         self._handles: List[StudyHandle] = []
@@ -159,12 +175,18 @@ class ExecutionEngine:
         handles = [self.handle(t) for t in tuners]
         for h in handles:
             h.tuner.start(h)
-        self._drain()
-        not_done = [h.tuner for h in handles if not h.tuner.is_done()]
-        if not_done:
-            raise RuntimeError(
-                f"engine drained but {len(not_done)} tuner(s) not done — "
-                "a tuner is waiting on a request that was never submitted")
+        try:
+            self._drain()
+            not_done = [h.tuner for h in handles if not h.tuner.is_done()]
+            if not_done:
+                raise RuntimeError(
+                    f"engine drained but {len(not_done)} tuner(s) not done — "
+                    "a tuner is waiting on a request that was never submitted")
+        finally:
+            # write-behind barrier: every pending boundary checkpoint must
+            # be durably committed (and writer failures surfaced) even on
+            # an error exit — the plan already records those cids
+            self.store.flush()
         self.stats.end_to_end = self.events.time
         return self.stats
 

@@ -41,7 +41,7 @@ from repro.core.searchplan import Request, SearchPlan
 from repro.core.values import desc_values
 
 __all__ = ["Stage", "StageTree", "StageTreeBuilder", "build_stage_tree",
-           "sibling_groups", "stage_trees_equal"]
+           "sibling_groups", "sibling_chain_groups", "stage_trees_equal"]
 
 
 @dataclass
@@ -351,16 +351,70 @@ def sibling_groups(plan: SearchPlan, tree: StageTree,
             continue
         by_bs: Dict[Optional[Tuple], List[Stage]] = {}
         for st in cands:
-            node = plan.node(st.node_id)
-            bs_piece = node.desc["hps"].get("bs")
-            if bs_piece is not None:
-                bs = desc_values({"hps": {"bs": bs_piece}}, node.start,
-                                 st.start, st.stop)["bs"]
-                bs_sig: Optional[Tuple] = tuple(int(round(v)) for v in bs)
-            else:
-                bs_sig = None
-            by_bs.setdefault(bs_sig, []).append(st)
+            by_bs.setdefault(_bs_signature(plan, st), []).append(st)
         out.extend(g for g in by_bs.values() if len(g) >= min_size)
+    return out
+
+
+def _bs_signature(plan: SearchPlan, st: Stage) -> Optional[Tuple]:
+    """Per-step batch-size schedule of a stage (None = no bs sequence)."""
+    node = plan.node(st.node_id)
+    bs_piece = node.desc["hps"].get("bs")
+    if bs_piece is None:
+        return None
+    bs = desc_values({"hps": {"bs": bs_piece}}, node.start,
+                     st.start, st.stop)["bs"]
+    return tuple(int(round(v)) for v in bs)
+
+
+def _stage_signature(plan: SearchPlan, st: Stage) -> Tuple:
+    """Full batchability signature: two stages with equal signatures can be
+    one level of a batched sibling-chain group (same step range, static
+    hps, hp names and bs schedule; hp *values* are free to diverge)."""
+    node = plan.node(st.node_id)
+    return (st.start, st.stop, plan.static_hash(st.node_id),
+            tuple(sorted(node.desc["hps"])), _bs_signature(plan, st))
+
+
+def sibling_chain_groups(plan: SearchPlan, tree: StageTree,
+                         min_size: int = 2) -> List[List[List[Stage]]]:
+    """Parallel sibling *chains* executable as one batched call per stage
+    level (``TrainerBackend.run_chains_batched``).
+
+    Each group starts from a :func:`sibling_groups` head group and extends
+    downward while every member has exactly ONE child stage with real
+    training work and all the children share the batchability signature
+    (same ``[start, stop)``, static hps, hp names and bs schedule).  A fork
+    (a member with several children) or a signature divergence stops the
+    extension — the tails fall back to the ordinary chain scheduler.
+    ``report`` flags are free to differ level by level: evaluation happens
+    per member outside the batched call, at the boundary snapshot.
+
+    Returns ``[group][member] -> chain (list of stages, depth >= 1)``; the
+    depth-1 case is exactly the old sibling group.
+    """
+    out: List[List[List[Stage]]] = []
+    for heads in sibling_groups(plan, tree, min_size):
+        chains = [[st] for st in heads]
+        frontier = heads
+        while True:
+            nexts: List[Stage] = []
+            for st in frontier:
+                if len(st.children) != 1:
+                    break
+                child = tree.stages[st.children[0]]
+                if child.steps <= 0:
+                    break
+                nexts.append(child)
+            else:
+                sigs = {_stage_signature(plan, nx) for nx in nexts}
+                if len(sigs) == 1:
+                    for chain, nx in zip(chains, nexts):
+                        chain.append(nx)
+                    frontier = nexts
+                    continue
+            break
+        out.append(chains)
     return out
 
 

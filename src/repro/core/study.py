@@ -46,11 +46,14 @@ class Study:
                policy: Union[str, SchedulingPolicy, None] = None,
                store: Optional[CheckpointStore] = None,
                max_steps_per_chain: Optional[int] = None,
-               batch_siblings: Optional[bool] = None) -> ExecutionEngine:
+               batch_siblings: Optional[bool] = None,
+               chain_fusion: Optional[bool] = None) -> ExecutionEngine:
         """``policy`` selects the scheduling policy by name ("critical_path",
         "weighted_fanout", "fifo", "fair_share") or instance; the legacy
         ``weighted_paths`` flag is kept as a shorthand for the default.
-        ``batch_siblings`` forces sibling-trial batching on/off (default:
+        ``batch_siblings`` forces sibling-trial batching on/off and
+        ``chain_fusion`` forces chain-fused execution (device-resident
+        carries + write-behind boundary checkpoints) on/off (defaults:
         whatever the backend supports)."""
         if policy is not None and weighted_paths:
             raise ValueError(
@@ -69,7 +72,7 @@ class Study:
             scheduler=scheduler,
             store=store, share=share,
             max_steps_per_chain=max_steps_per_chain,
-            batch_siblings=batch_siblings)
+            batch_siblings=batch_siblings, chain_fusion=chain_fusion)
 
     def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
             **kw) -> EngineStats:

@@ -55,6 +55,12 @@ class TrainerBackend:
     #: without pretending they batch.
     supports_batched_stages: bool = False
 
+    #: True when :meth:`run_chain` keeps the state carry on device across
+    #: stage boundaries (no host round-trip between consecutive stages of a
+    #: chain).  The dispatcher then executes whole scheduler-extracted
+    #: chains through it and write-behinds the boundary checkpoints.
+    supports_chain_fusion: bool = False
+
     def init_state(self) -> Any:
         """Fresh model state (step 0)."""
         raise NotImplementedError
@@ -72,6 +78,32 @@ class TrainerBackend:
         ``supports_batched_stages``); the default runs members sequentially,
         which is always semantically equivalent."""
         return [self.run_stage(s, c) for s, c in zip(states, ctxs)]
+
+    def run_chain(self, state: Any, ctxs: Sequence[StageContext]) -> List[Any]:
+        """Execute a whole chain — consecutive stages, each starting where
+        the previous stopped — returning the state at EVERY stage boundary
+        (``len(ctxs)`` states; the dispatcher checkpoints each one and posts
+        per-stage events, so the virtual clock keeps stage granularity).
+        Backends that keep the carry on device across boundaries override
+        this (and set ``supports_chain_fusion``); the default per-stage loop
+        is always semantically equivalent."""
+        out: List[Any] = []
+        for ctx in ctxs:
+            if ctx.stop > ctx.start:
+                state = self.run_stage(state, ctx)
+            out.append(state)
+        return out
+
+    def run_chains_batched(self, states: Sequence[Any],
+                           chains: Sequence[Sequence[StageContext]]
+                           ) -> List[List[Any]]:
+        """Execute a group of parallel sibling *chains* — equal depth, and
+        stage-wise identical ``[start, stop)`` / static hps / hp names /
+        batch-size schedules, divergent hp values — returning the per-stage
+        boundary states of every member (``[member][stage]``).  Fusing
+        backends run each stage level as one batched call over member-
+        stacked carries; the default runs member chains sequentially."""
+        return [self.run_chain(s, c) for s, c in zip(states, chains)]
 
     def evaluate(self, state: Any, ctx: StageContext) -> Dict[str, float]:
         """Metrics of the model at ``ctx.stop``."""

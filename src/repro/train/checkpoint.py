@@ -13,6 +13,23 @@ Two backends:
 * directory spill     — ``.npz``-serialized leaves + JSON treedef, the
   layout a real deployment would put on a distributed file system.
 
+Write-behind layer (chain-fused execution): :meth:`put_async` records the
+checkpoint in a device-resident *pending* cache and hands the commit
+(host transfer + serialization + disk write) to a background writer
+thread, so stage boundaries inside a fused chain never stall on
+checkpoint I/O.  Pending entries are indistinguishable from committed
+ones to every reader — ``get`` / ``contains`` / ``__len__`` serve them,
+and ``evict`` cancels them (a kill that races an in-flight write discards
+the write instead of leaking the file).  :meth:`flush` is the barrier:
+it blocks until every pending write has committed (engine shutdown, and
+anything that needs the bytes durably on disk).
+
+Directory-backend read path: a bounded LRU cache keeps the most recently
+``get``-ed trees deserialized (repeated resumes of a hot checkpoint no
+longer re-read and re-unpickle the ``.npz`` each time), ``bytes_read``
+counts actual disk traffic, and the ``__len__`` disk scan is cached and
+maintained incrementally instead of re-running ``os.listdir`` per call.
+
 Beyond-paper: reference-counted eviction (``evict``) with
 recompute-on-miss handled upstream (the engine simply re-derives the stage
 from the search plan if a resume checkpoint is gone).
@@ -23,7 +40,9 @@ from __future__ import annotations
 import io
 import json
 import os
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import threading
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -62,17 +81,35 @@ def unstack_pytree(tree: Any, n: int) -> List[Any]:
 
 
 class CheckpointStore:
-    """put/get pytrees by (path_key, step); optionally spill to a directory."""
+    """put/get pytrees by (path_key, step); optionally spill to a directory.
 
-    def __init__(self, directory: Optional[str] = None):
+    ``read_cache_entries`` bounds the directory backend's LRU read cache
+    (0 disables it); the in-memory backend needs no cache.
+    """
+
+    def __init__(self, directory: Optional[str] = None,
+                 read_cache_entries: int = 32):
         self.directory = directory
         if directory:
             os.makedirs(directory, exist_ok=True)
         self._mem: Dict[str, Any] = {}
         self.bytes_written = 0
+        self.bytes_read = 0
         self.puts = 0
+        self.async_puts = 0
         self.gets = 0
         self.hits = 0
+        # ---- write-behind state (all guarded by _cv's lock) ----
+        self._pending: Dict[str, Any] = {}   # cid -> tree awaiting commit
+        self._work: deque = deque()          # commit order
+        self._cancelled: set = set()         # evicted while commit in flight
+        self._cv = threading.Condition()
+        self._writer: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
+        # ---- directory read path ----
+        self.read_cache_entries = int(read_cache_entries)
+        self._read_cache: "OrderedDict[str, Any]" = OrderedDict()
+        self._disk_count: Optional[int] = None   # cached __len__ scan
 
     # -------------------------------------------------------------- keys
     @staticmethod
@@ -83,7 +120,7 @@ class CheckpointStore:
     def put(self, path_key: str, step: int, tree: Any) -> str:
         cid = self.ckpt_id(path_key, step)
         self.puts += 1
-        if cid in self._mem or (self.directory and os.path.exists(self._path(cid))):
+        if self._revoke_or_dedup(cid):
             return cid  # content already produced by a sibling — dedup
         if self.directory:
             self._write_disk(cid, tree)
@@ -91,46 +128,204 @@ class CheckpointStore:
             self._mem[cid] = tree
         return cid
 
-    def put_stacked(self, entries: Sequence[Tuple[str, int, Any]]) -> List[str]:
-        """Deposit the unstacked results of one batched sibling execution:
-        ``entries`` is ``[(path_key, step, state), ...]`` — one per group
-        member.  Content addressing dedups exactly as per-stage ``put``."""
-        return [self.put(path_key, step, state)
-                for path_key, step, state in entries]
+    def put_async(self, path_key: str, step: int, tree: Any) -> str:
+        """Write-behind ``put``: the tree enters the pending cache (served
+        to readers immediately) and the commit — host transfer, serialize,
+        disk write — happens on the background writer thread.  Returns the
+        cid exactly like :meth:`put`; :meth:`flush` is the durability
+        barrier."""
+        cid = self.ckpt_id(path_key, step)
+        self.puts += 1
+        if self._revoke_or_dedup(cid):
+            return cid
+        with self._cv:
+            self._pending[cid] = tree
+            self._work.append(cid)
+            self.async_puts += 1
+            if self._writer is None:
+                self._writer = threading.Thread(
+                    target=self._writer_loop, name="ckpt-writer", daemon=True)
+                self._writer.start()
+            self._cv.notify_all()
+        return cid
+
+    def _revoke_or_dedup(self, cid: str) -> bool:
+        """True when ``cid`` is already held (pending / committed) and the
+        put can dedup.  A cid whose in-flight commit was cancelled by an
+        eviction is NOT deduped — its disk bytes are about to be undone —
+        but the cancellation is revoked so the undo never happens to the
+        re-deposited content (same cid == same content)."""
+        with self._cv:
+            if cid in self._pending:
+                return True
+            if cid in self._cancelled:
+                self._cancelled.discard(cid)
+                return False
+        return cid in self._mem or (
+            self.directory is not None and os.path.exists(self._path(cid)))
+
+    def _known(self, cid: str) -> bool:
+        with self._cv:
+            if cid in self._pending:
+                return True
+            if cid in self._cancelled:
+                # an in-flight commit of this content is being undone; its
+                # disk bytes are untrustworthy until the undo lands
+                return False
+        return cid in self._mem or (
+            self.directory is not None and os.path.exists(self._path(cid)))
+
+    # --------------------------------------------------------- writer thread
+    _IDLE_EXIT_SECONDS = 5.0   # idle writer threads retire themselves
+
+    def _writer_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._work:
+                    if not self._cv.wait(timeout=self._IDLE_EXIT_SECONDS):
+                        if not self._work:
+                            # idle too long: retire so the thread (and the
+                            # store it pins) can be reclaimed; put_async
+                            # spawns a fresh writer on the next deposit
+                            self._writer = None
+                            return
+                cid = self._work.popleft()
+                tree = self._pending.get(cid)
+            if tree is None:
+                continue  # superseded (a revoked re-put already committed)
+            try:
+                staged = (self._serialize_disk(cid, tree)
+                          if self.directory else None)
+            except BaseException as e:  # surfaced at the next flush()
+                with self._cv:
+                    self._write_error = e
+                    self._pending.pop(cid, None)
+                    self._cancelled.discard(cid)
+                    self._cv.notify_all()
+                continue
+            with self._cv:
+                try:
+                    if cid in self._cancelled:
+                        # evicted while serializing: the commit never
+                        # publishes — the final path is untouched, only
+                        # temps to discard
+                        self._cancelled.discard(cid)
+                        if staged is not None:
+                            for tmp in staged[1:]:
+                                os.remove(tmp)
+                    else:
+                        # publish + state transition in ONE critical
+                        # section so __len__ never sees a cid as both
+                        # pending and on disk
+                        if staged is not None:
+                            self._publish_disk(cid, *staged)
+                        elif cid in self._pending:
+                            self._mem[cid] = tree
+                        self._pending.pop(cid, None)
+                except BaseException as e:
+                    # a publish/cancel failure must never strand the cid in
+                    # _pending/_cancelled: flush() would deadlock instead
+                    # of surfacing the error
+                    self._write_error = e
+                    self._pending.pop(cid, None)
+                    self._cancelled.discard(cid)
+                finally:
+                    self._cv.notify_all()
+
+    def flush(self) -> None:
+        """Block until every pending write has committed and every
+        cancelled in-flight commit has been undone.  Raises if the writer
+        thread failed."""
+        with self._cv:
+            while self._pending or self._cancelled:
+                self._cv.wait()
+            if self._write_error is not None:
+                err, self._write_error = self._write_error, None
+                raise RuntimeError("checkpoint write-behind failed") from err
+
+    @property
+    def pending_writes(self) -> int:
+        with self._cv:
+            return len(self._pending)
 
     # --------------------------------------------------------------- get
     def get(self, cid: str) -> Any:
         self.gets += 1
+        with self._cv:
+            tree = self._pending.get(cid)
+            cancelled = cid in self._cancelled
+        if tree is not None:        # in-flight write: serve the live object
+            self.hits += 1
+            return tree
+        if cancelled:               # evicted mid-commit: gone to readers
+            raise KeyError(f"checkpoint {cid!r} not in store")
         if cid in self._mem:
             self.hits += 1
             return self._mem[cid]
         if self.directory:
+            cached = self._read_cache.get(cid)
+            if cached is not None:
+                self._read_cache.move_to_end(cid)
+                self.hits += 1
+                return cached
             p = self._path(cid)
             if os.path.exists(p):
+                try:
+                    tree = self._read_disk(cid)
+                except FileNotFoundError:
+                    # concurrently evicted between exists() and open():
+                    # missing, not corrupt — callers key recompute-on-miss
+                    # off KeyError
+                    raise KeyError(f"checkpoint {cid!r} not in store")
                 self.hits += 1
-                return self._read_disk(cid)
+                self._cache_read(cid, tree)
+                return tree
         raise KeyError(f"checkpoint {cid!r} not in store")
 
     def contains(self, cid: str) -> bool:
-        return cid in self._mem or (
-            self.directory is not None and os.path.exists(self._path(cid)))
+        return self._known(cid)
+
+    def _cache_read(self, cid: str, tree: Any) -> None:
+        if self.read_cache_entries <= 0:
+            return
+        self._read_cache[cid] = tree
+        self._read_cache.move_to_end(cid)
+        while len(self._read_cache) > self.read_cache_entries:
+            self._read_cache.popitem(last=False)
 
     # ------------------------------------------------------------- evict
     def evict(self, cid: str) -> bool:
+        with self._cv:
+            if cid in self._pending:
+                del self._pending[cid]
+                try:
+                    # not yet picked up by the writer: nothing to undo
+                    self._work.remove(cid)
+                except ValueError:
+                    # commit in flight: the writer undoes it on completion
+                    self._cancelled.add(cid)
+                self._cv.notify_all()
+                return True
+        self._read_cache.pop(cid, None)
         if cid in self._mem:
             del self._mem[cid]
             return True
-        if self.directory:
-            p = self._path(cid)
-            if os.path.exists(p):
-                os.remove(p)
-                return True
+        if self.directory and os.path.exists(self._path(cid)):
+            self._remove_disk(cid)
+            return True
         return False
 
     def __len__(self) -> int:
-        n = len(self._mem)
-        if self.directory:
-            n += sum(1 for f in os.listdir(self.directory) if f.endswith(".ckpt"))
+        # one critical section: publish + pending-removal are atomic on the
+        # writer side, so a cid is never counted as both pending and on disk
+        with self._cv:
+            n = len(self._mem) + len(self._pending)
+            if self.directory:
+                if self._disk_count is None:
+                    self._disk_count = sum(
+                        1 for f in os.listdir(self.directory)
+                        if f.endswith(".ckpt"))
+                n += self._disk_count
         return n
 
     # ---------------------------------------------------------- disk I/O
@@ -139,13 +334,24 @@ class CheckpointStore:
         return os.path.join(self.directory, safe + ".ckpt")
 
     def _write_disk(self, cid: str, tree: Any) -> None:
+        staged = self._serialize_disk(cid, tree)
+        with self._cv:   # counters/publish shared with the writer thread
+            self._publish_disk(cid, *staged)
+
+    def _serialize_disk(self, cid: str, tree: Any) -> tuple:
+        """Serialize to thread-unique temp files (no lock held; the final
+        path is untouched).  Returns ``(payload_len, tmp, tree_tmp)`` for
+        :meth:`_publish_disk`."""
         leaves, treedef = _tree_flatten(tree)
         buf = io.BytesIO()
         arrs = {f"leaf{i}": np.asarray(x) for i, x in enumerate(leaves)}
         np.savez(buf, **arrs)
         payload = buf.getvalue()
         meta = json.dumps({"treedef": str(treedef), "n": len(leaves)})
-        with open(self._path(cid), "wb") as f:
+        path = self._path(cid)
+        tid = threading.get_ident()
+        tmp, tree_tmp = f"{path}.{tid}.tmp", f"{path}.tree.{tid}.tmp"
+        with open(tmp, "wb") as f:
             header = meta.encode("utf-8")
             f.write(len(header).to_bytes(8, "little"))
             f.write(header)
@@ -153,9 +359,33 @@ class CheckpointStore:
         # treedef structure is re-derivable only with the original aux data;
         # store a pickled treedef alongside for exact reconstruction.
         import pickle
-        with open(self._path(cid) + ".tree", "wb") as f:
+        with open(tree_tmp, "wb") as f:
             pickle.dump(treedef, f)
-        self.bytes_written += len(payload)
+        return len(payload), tmp, tree_tmp
+
+    def _publish_disk(self, cid: str, payload_len: int, tmp: str,
+                      tree_tmp: str) -> None:
+        """Atomically publish staged temp files (caller holds ``_cv``):
+        rename the sidecar first and the payload last, so a crash (or the
+        daemon writer being reaped at interpreter exit) can never leave a
+        half-written file at the address readers probe with exists()."""
+        path = self._path(cid)
+        existed = os.path.exists(path)
+        os.replace(tree_tmp, path + ".tree")
+        os.replace(tmp, path)
+        self.bytes_written += payload_len
+        if self._disk_count is not None and not existed:
+            self._disk_count += 1
+
+    def _remove_disk(self, cid: str) -> None:
+        os.remove(self._path(cid))
+        tree_file = self._path(cid) + ".tree"
+        if os.path.exists(tree_file):
+            os.remove(tree_file)
+        self._read_cache.pop(cid, None)
+        with self._cv:
+            if self._disk_count is not None:
+                self._disk_count -= 1
 
     def _read_disk(self, cid: str) -> Any:
         import pickle
@@ -165,6 +395,8 @@ class CheckpointStore:
             payload = f.read()
         with open(self._path(cid) + ".tree", "rb") as f:
             treedef = pickle.load(f)
+        with self._cv:
+            self.bytes_read += len(payload)
         with np.load(io.BytesIO(payload)) as z:
             leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
         return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -32,6 +32,15 @@ The gate keys on ``jax.default_backend()``; tests inject ``backend=`` (and
 ``donate=False``, since XLA:CPU cannot honor donation) to structure-test
 the accelerator path on the CPU container.
 
+Chain fusion: :meth:`run_chain` executes an entire scheduler-extracted
+chain with the ``(params, opt)`` carry and the data pipeline held live
+across every stage boundary — no checkpoint round-trip, no slab
+re-prefetch, no restack between consecutive stages — while still
+returning a boundary snapshot per stage for the dispatcher's write-behind
+checkpointing.  :meth:`run_chains_batched` is the batched flavour: a group
+of parallel sibling chains advances one stage level per compiled call over
+a member-stacked carry that itself persists across boundaries.
+
 Sibling-trial batching: :meth:`run_stages_batched` executes a whole group
 of sibling stages — same ``[start, stop)``, same static hps and batch-size
 schedule, divergent hp *values* — as ONE compiled call over member-stacked
@@ -131,6 +140,10 @@ class JaxTrainer(TrainerBackend):
 
     @property
     def supports_batched_stages(self) -> bool:  # type: ignore[override]
+        return self.fused
+
+    @property
+    def supports_chain_fusion(self) -> bool:  # type: ignore[override]
         return self.fused
 
     # ------------------------------------------------------------------ state
@@ -294,27 +307,63 @@ class JaxTrainer(TrainerBackend):
                     for s, c in zip(states, ctxs)]
         return self._run_fused(list(states), list(ctxs))
 
+    def run_chain(self, state: Dict[str, Any],
+                  ctxs: Sequence[StageContext]) -> List[Dict[str, Any]]:
+        """Chain-fused execution: the carry stays on device across every
+        stage boundary (one persistent pipeline, no restack, no host
+        round-trip) and a boundary snapshot is returned per stage — bit-
+        identical to running :meth:`run_stage` per stage on CPU."""
+        if not self.fused:
+            return super().run_chain(state, ctxs)
+        return self._run_fused_chain([state], [list(ctxs)])[0]
+
+    def run_chains_batched(self, states: Sequence[Dict[str, Any]],
+                           chains: Sequence[Sequence[StageContext]]
+                           ) -> List[List[Dict[str, Any]]]:
+        """Batched multi-stage chains: every stage level of a sibling-chain
+        group executes as one compiled call over member-stacked carries,
+        and the stack itself persists across stage boundaries."""
+        if not self.fused:
+            return [self.run_chain(s, c) for s, c in zip(states, chains)]
+        return self._run_fused_chain(list(states),
+                                     [list(c) for c in chains])
+
     def _run_fused(self, states: List[Dict[str, Any]],
                    ctxs: List[StageContext]) -> List[Dict[str, Any]]:
-        group = len(states)
-        ctx0 = ctxs[0]
-        n = ctx0.stop - ctx0.start
-        plans = [self._stage_plan(c) for c in ctxs]
-        vals0, static_hp0, opt_name, names0 = plans[0]
-        runs = self._bs_runs(vals0, n)
-        for c, (vals, static_hp, opt_n, names) in zip(ctxs[1:], plans[1:]):
-            if (c.start, c.stop) != (ctx0.start, ctx0.stop):
-                raise ValueError("batched stages must share [start, stop)")
-            if opt_n != opt_name or static_hp != static_hp0:
-                raise ValueError("batched stages must share static hps")
-            if names != names0:
-                raise ValueError("batched stages must share hp names")
-            if self._bs_runs(vals, n) != runs:
-                raise ValueError("batched stages must share the bs schedule")
+        return [b[-1] for b in
+                self._run_fused_chain(states, [[c] for c in ctxs])]
 
+    def _run_fused_chain(self, states: List[Dict[str, Any]],
+                         chains: List[List[StageContext]]
+                         ) -> List[List[Dict[str, Any]]]:
+        """Run ``group`` parallel chains (one per member) of equal depth,
+        returning ``[member][stage]`` boundary states.
+
+        The carry — ``(params, opt)``, member-stacked for groups — and the
+        data pipelines persist across stage boundaries; each boundary only
+        snapshots the carry (for groups: per-member gathers off the stack)
+        so the dispatcher can checkpoint it, then execution continues on
+        device.  ``group == 1, depth == 1`` degenerates to the old fused
+        single-stage path, ``group > 1, depth == 1`` to sibling batching."""
+        group = len(states)
+        depth = len(chains[0])
+        for ch in chains[1:]:
+            if len(ch) != depth:
+                raise ValueError("batched chains must share their depth")
+        plans = [[self._stage_plan(c) for c in ch] for ch in chains]
+        for ch in chains:   # stages of one chain must be contiguous
+            step = ch[0].start
+            for c in ch:
+                if c.start != step:
+                    raise ValueError(
+                        f"chain stages must be contiguous: stage starts at "
+                        f"{c.start}, previous stopped at {step}")
+                step = c.stop
+
+        opt_name = plans[0][0][2]
         params_l, opt_l = [], []
-        for s, c in zip(states, ctxs):
-            assert s["step"] == c.start, (s["step"], c.start)
+        for s, ch in zip(states, chains):
+            assert s["step"] == ch[0].start, (s["step"], ch[0].start)
             params_l.append(s["params"])
             opt = s["opt"]
             if opt is None or s["opt_name"] != opt_name:
@@ -329,61 +378,90 @@ class JaxTrainer(TrainerBackend):
             pipe = self.pipeline_factory()
             pipe.restore(s["data"])
             pipes.append(pipe)
-        if runs and runs[0][2] is None and len(pipes) > 1:
-            if len({p.batch_size for p in pipes}) > 1:
-                raise ValueError("batched stages must share the batch size")
 
         if group == 1:
             carry = (params_l[0], opt_l[0])
         else:
             carry = (stack_pytrees(params_l), stack_pytrees(opt_l))
-        hp_sig = (tuple(sorted(names0)), tuple(sorted(static_hp0)))
+        boundaries: List[List[Dict[str, Any]]] = [[] for _ in range(group)]
 
-        first = True
-        for i0, i1, bs in runs:
-            if bs is not None:
-                for pipe in pipes:
-                    pipe.set_batch_size(bs)
-            w0 = i0
-            for k_len in chunk_lengths(i1 - i0, self.chunk_steps):
-                w1 = w0 + k_len
-                slabs = [pipe.next_batches(k_len) for pipe in pipes]
-                steps = jnp.arange(ctx0.start + w0, ctx0.start + w1,
-                                   dtype=jnp.int32)
-                if group == 1:
-                    hp_xs = {k: np.asarray(vals0[k][w0:w1], np.float32)
-                             for k in names0}
-                    # never donate the caller's state (it may be a live
-                    # checkpoint); chunks after the first own their carry
-                    carry, _ = self._call_fused(
-                        opt_name, k_len, self._slab_sig(slabs[0]), hp_sig,
-                        self._donate and not first,
-                        (carry, static_hp0, hp_xs, slabs[0], steps))
-                else:
-                    hp_xs = {k: np.asarray([vals[k][w0:w1]
-                                            for vals, _, _, _ in plans],
-                                           np.float32)
-                             for k in names0}
-                    slab = (slabs[0] if shared_data else
-                            {k: np.stack([s[k] for s in slabs])
-                             for k in slabs[0]})
-                    carry, _ = self._call_group(
-                        opt_name, group, k_len, self._slab_sig(slabs[0]),
-                        hp_sig, shared_data,
-                        (carry, static_hp0, hp_xs, slab, steps))
-                first = False
-                w0 = w1
+        for j in range(depth):
+            ctx0 = chains[0][j]
+            n = ctx0.stop - ctx0.start
+            vals0, static_hp0, stage_opt, names0 = plans[0][j]
+            runs = self._bs_runs(vals0, n)
+            for ch, pl in zip(chains[1:], plans[1:]):
+                c = ch[j]
+                vals, static_hp, opt_n, names = pl[j]
+                if (c.start, c.stop) != (ctx0.start, ctx0.stop):
+                    raise ValueError("batched stages must share [start, stop)")
+                if opt_n != stage_opt or static_hp != static_hp0:
+                    raise ValueError("batched stages must share static hps")
+                if names != names0:
+                    raise ValueError("batched stages must share hp names")
+                if self._bs_runs(vals, n) != runs:
+                    raise ValueError("batched stages must share the bs schedule")
+            if j == 0 and runs and runs[0][2] is None and len(pipes) > 1:
+                if len({p.batch_size for p in pipes}) > 1:
+                    raise ValueError("batched stages must share the batch size")
+            if stage_opt != opt_name:
+                # optimizer switch at the boundary: fresh slots, exactly as
+                # run_stage would re-init on the restored state
+                carry = (carry[0], init_opt_state(stage_opt, carry[0]))
+                opt_name = stage_opt
+            hp_sig = (tuple(sorted(names0)), tuple(sorted(static_hp0)))
 
-        if group == 1:
-            params_out, opt_out = [carry[0]], [carry[1]]
-        else:
-            params_out = unstack_pytree(carry[0], group)
-            opt_out = unstack_pytree(carry[1], group)
-        datas = ([pipes[0].state()] * group if shared_data
-                 else [p.state() for p in pipes])
-        return [{"params": p, "opt": o, "opt_name": opt_name,
-                 "data": d, "step": ctx0.stop}
-                for p, o, d in zip(params_out, opt_out, datas)]
+            # the previous boundary snapshot aliases the carry: the first
+            # chunk after a snapshot (and the caller's state) is never
+            # donated; later chunks within the stage own their carry
+            first = True
+            for i0, i1, bs in runs:
+                if bs is not None:
+                    for pipe in pipes:
+                        pipe.set_batch_size(bs)
+                w0 = i0
+                for k_len in chunk_lengths(i1 - i0, self.chunk_steps):
+                    w1 = w0 + k_len
+                    slabs = [pipe.next_batches(k_len) for pipe in pipes]
+                    steps = jnp.arange(ctx0.start + w0, ctx0.start + w1,
+                                       dtype=jnp.int32)
+                    if group == 1:
+                        hp_xs = {k: np.asarray(vals0[k][w0:w1], np.float32)
+                                 for k in names0}
+                        carry, _ = self._call_fused(
+                            opt_name, k_len, self._slab_sig(slabs[0]), hp_sig,
+                            self._donate and not first,
+                            (carry, static_hp0, hp_xs, slabs[0], steps))
+                    else:
+                        hp_xs = {k: np.asarray([pl[j][0][k][w0:w1]
+                                                for pl in plans],
+                                               np.float32)
+                                 for k in names0}
+                        slab = (slabs[0] if shared_data else
+                                {k: np.stack([s[k] for s in slabs])
+                                 for k in slabs[0]})
+                        carry, _ = self._call_group(
+                            opt_name, group, k_len, self._slab_sig(slabs[0]),
+                            hp_sig, shared_data,
+                            (carry, static_hp0, hp_xs, slab, steps))
+                    first = False
+                    w0 = w1
+
+            # ---- boundary snapshot: per-member state the dispatcher can
+            # checkpoint; the carry itself stays on device for stage j+1
+            if group == 1:
+                params_out, opt_out = [carry[0]], [carry[1]]
+            else:
+                params_out = unstack_pytree(carry[0], group)
+                opt_out = unstack_pytree(carry[1], group)
+            datas = ([pipes[0].state()] * group if shared_data
+                     else [p.state() for p in pipes])
+            for m in range(group):
+                boundaries[m].append(
+                    {"params": params_out[m], "opt": opt_out[m],
+                     "opt_name": opt_name, "data": datas[m],
+                     "step": ctx0.stop})
+        return boundaries
 
     # ----------------------------------------------- seed per-step reference
     def _jitted_step(self, opt_name: str):

@@ -1,0 +1,290 @@
+"""Chain-fused execution semantics: device-resident carries across stage
+boundaries + the write-behind checkpoint plane.
+
+A chain-capable simulated backend (virtual durations, dict states) drives
+the engine-level contracts cheaply:
+
+* chain fusion is *accounting-invariant*: the same study produces exactly
+  the same virtual clock, GPU-seconds, metrics and checkpoints as the
+  per-stage loop (events still land per stage);
+* kill-mid-chain lands the completed prefix (flushed, GC-correct,
+  resumable) and discards the in-flight suffix — including cancelling
+  write-behind commits that have not hit disk yet;
+* engine shutdown is a ``flush()`` barrier: every checkpoint the plan
+  records is durably on disk when ``run()`` returns;
+* ``sibling_chain_groups`` extends sibling groups down parallel chains
+  with identical per-stage signatures and stops at forks / divergences.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Constant, HpConfig, MultiStep, SearchPlanDB, Study)
+from repro.core.engine import Tuner
+from repro.core.searchplan import SearchPlan
+from repro.core.stagetree import build_stage_tree, sibling_chain_groups
+from repro.core.trainer import SimulatedTrainer
+from repro.core.trial import Trial
+from repro.core.tuners import GridTuner, SHATuner
+from repro.train.checkpoint import CheckpointStore
+
+
+class ChainSimTrainer(SimulatedTrainer):
+    """Simulated backend that advertises chain fusion: the default
+    ``run_chain`` per-stage loop already returns boundary states, so the
+    flag alone routes execution through the dispatcher's fused path."""
+
+    supports_chain_fusion = True
+
+
+class BatchedChainSimTrainer(ChainSimTrainer):
+    supports_batched_stages = True
+
+
+def seq_trial(lr0, lr1, steps=24, boundary=12, bs=None):
+    hps = {"lr": MultiStep(lr0, [boundary], values=[lr0, lr1])}
+    if bs is not None:
+        hps["bs"] = Constant(bs)
+    return Trial(HpConfig(hps), steps)
+
+
+def stats_key(stats):
+    return (round(stats.gpu_seconds, 9), round(stats.end_to_end, 9),
+            stats.stages_run, stats.steps_run, stats.evals_run,
+            stats.ckpt_saves, stats.ckpt_loads)
+
+
+def run_sha(backend, chain_fusion, store=None, n_workers=2):
+    db = SearchPlanDB()
+    study = Study.create(db, "m", "d", ("lr",))
+    trials = [seq_trial(0.1 - 0.01 * i, 0.01 - 0.001 * i, steps=24)
+              for i in range(6)]
+    tuner = SHATuner(trials, min_steps=12, max_steps=24, eta=2)
+    eng = study.engine(backend, n_workers=n_workers, store=store,
+                       chain_fusion=chain_fusion)
+    stats = eng.run([tuner])
+    return db.get(study.key), eng, stats
+
+
+# ---------------------------------------------------------------------------
+# accounting invariance
+# ---------------------------------------------------------------------------
+
+
+def test_chain_fusion_is_accounting_invariant():
+    """Fused chains post the same per-stage events at the same virtual
+    times as the per-stage loop: every stat and every recorded metric is
+    identical, only the chain_fused_stages counter moves."""
+    plan_f, eng_f, stats_f = run_sha(ChainSimTrainer(), chain_fusion=True)
+    plan_u, eng_u, stats_u = run_sha(ChainSimTrainer(), chain_fusion=False)
+
+    assert stats_f.chain_fused_stages > 0
+    assert stats_u.chain_fused_stages == 0
+    assert stats_f.ckpt_async_writes == stats_f.ckpt_saves
+    assert stats_u.ckpt_async_writes == 0
+    assert stats_key(stats_f) == stats_key(stats_u)
+
+    assert set(plan_f.nodes) == set(plan_u.nodes)
+    for nid, node in plan_f.nodes.items():
+        assert node.metrics == plan_u.nodes[nid].metrics
+        assert set(node.ckpts) == set(plan_u.nodes[nid].ckpts)
+
+
+def test_simulated_backend_defaults_to_unfused():
+    # SimulatedTrainer does not advertise chain fusion: the knob cannot
+    # force the fused path onto a backend without support
+    db = SearchPlanDB()
+    study = Study.create(db, "m", "d", ("lr",))
+    eng = study.engine(SimulatedTrainer(), chain_fusion=True)
+    assert eng.chain_fusion is False
+
+
+# ---------------------------------------------------------------------------
+# write-behind: shutdown barrier + kill-mid-chain
+# ---------------------------------------------------------------------------
+
+
+def test_engine_shutdown_flushes_write_behind(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    plan, eng, stats = run_sha(ChainSimTrainer(), chain_fusion=True,
+                               store=store)
+    assert stats.ckpt_async_writes > 0
+    assert store.pending_writes == 0           # flush barrier ran
+    for node in plan.nodes.values():           # every recorded cid is durable
+        for cid in node.ckpts.values():
+            assert os.path.exists(store._path(cid)), cid
+
+
+def test_kill_mid_chain_lands_prefix_discards_suffix(tmp_path):
+    """SHA kills losers whose later-stage results are still in flight: the
+    shared/completed prefix stays resumable on disk, the dead suffix is
+    evicted — even when its write-behind commit had not landed."""
+    store = CheckpointStore(str(tmp_path))
+    plan, eng, stats = run_sha(ChainSimTrainer(), chain_fusion=True,
+                               store=store, n_workers=1)
+    assert stats.chain_fused_stages > 0
+    assert stats.ckpt_evictions > 0            # losers reclaimed
+    assert store.pending_writes == 0
+    for node in plan.nodes.values():
+        if node.refcount <= 0:                 # dead: no checkpoints anywhere
+            assert node.ckpts == {}
+        for cid in node.ckpts.values():
+            assert os.path.exists(store._path(cid))
+    # the store holds exactly the surviving checkpoints (cancelled pending
+    # writes never materialized files)
+    live = {cid for node in plan.nodes.values()
+            for cid in node.ckpts.values()}
+    on_disk = {f for f in os.listdir(str(tmp_path)) if f.endswith(".ckpt")}
+    assert on_disk == {os.path.basename(store._path(c)) for c in live}
+
+
+class KillAfterFirstReport(Tuner):
+    """Submits two requests per trial (mid-chain report at ``rung``), then
+    kills the weaker trial at the rung — exercising a kill whose chain had
+    already run to completion in one fused dispatch."""
+
+    def __init__(self, trials, rung):
+        self.trials = trials
+        self.rung = rung
+        self.scores = {}
+        self.done_trials = set()
+
+    def start(self, handle):
+        self.handle = handle
+        for t in self.trials:
+            handle.submit(t, upto=self.rung)
+            handle.submit(t)                   # full budget, same chain
+
+    def on_result(self, trial, step, metrics):
+        if step == self.rung:
+            self.scores[trial.trial_id] = self.score(metrics)
+            if len(self.scores) == len(self.trials):
+                worst = min(self.scores, key=self.scores.get)
+                for t in self.trials:
+                    if t.trial_id == worst:
+                        self.handle.kill(t)
+                        self.done_trials.add(t.trial_id)
+        else:
+            self.done_trials.add(trial.trial_id)
+
+    def is_done(self):
+        return len(self.done_trials) >= len(self.trials)
+
+
+def test_kill_races_running_fused_chain(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    db = SearchPlanDB()
+    study = Study.create(db, "m", "d", ("lr",))
+    trials = [seq_trial(0.1, 0.01), seq_trial(0.09, 0.009)]
+    tuner = KillAfterFirstReport(trials, rung=12)
+    eng = study.engine(ChainSimTrainer(), n_workers=1, store=store)
+    stats = eng.run([tuner])
+    assert eng.chain_fusion
+    assert stats.chain_fused_stages >= 4       # two depth->=2 fused chains
+    plan = db.get(study.key)
+    # the killed trial's exclusive suffix node is gone, its files too
+    dead = [n for n in plan.nodes.values() if n.refcount <= 0]
+    assert dead and all(n.ckpts == {} for n in dead)
+    assert store.pending_writes == 0
+    for node in plan.nodes.values():
+        for cid in node.ckpts.values():
+            assert os.path.exists(store._path(cid))
+
+
+# ---------------------------------------------------------------------------
+# sibling-chain groups
+# ---------------------------------------------------------------------------
+
+
+def test_sibling_chain_groups_extend_down_parallel_chains():
+    plan = SearchPlan("g")
+    for i, lr in enumerate((0.1, 0.05, 0.025)):
+        plan.submit(Trial(HpConfig(
+            {"lr": MultiStep(lr, [10], values=[lr, lr / 10]),
+             "bs": Constant(32)}), 20, trial_id=f"t{i}"))
+    tree = build_stage_tree(plan)
+    groups = sibling_chain_groups(plan, tree)
+    assert len(groups) == 1
+    chains = groups[0]
+    assert len(chains) == 3                    # three parallel trials
+    assert all(len(c) == 2 for c in chains)    # extended over the boundary
+    for c in chains:
+        assert (c[0].start, c[0].stop) == (0, 10)
+        assert (c[1].start, c[1].stop) == (10, 20)
+        assert c[1].parent == c[0].stage_id
+
+
+def test_sibling_chain_groups_stop_at_bs_divergence():
+    plan = SearchPlan("g2")
+    # divergent head values (parallel chains); the second level diverges
+    # in batch-size schedule, which must stop the extension
+    for i, bs_tail in enumerate((32, 64)):
+        lr = 0.1 - 0.01 * i
+        plan.submit(Trial(HpConfig(
+            {"lr": MultiStep(lr, [10], values=[lr, lr / 10]),
+             "bs": MultiStep(32, [10], values=[32, bs_tail])}), 20,
+            trial_id=f"t{i}"))
+    tree = build_stage_tree(plan)
+    groups = sibling_chain_groups(plan, tree)
+    assert len(groups) == 1
+    assert all(len(c) == 1 for c in groups[0])   # heads only, no extension
+
+
+def test_batched_chain_group_matches_sequential_engine():
+    """Forced batched multi-stage chains on the simulator reproduce the
+    sequential engine's metrics and checkpoints exactly."""
+    def run(backend, batch, fusion):
+        db = SearchPlanDB()
+        study = Study.create(db, "m", "d", ("lr",))
+        trials = [seq_trial(0.1 - 0.02 * i, 0.01 - 0.002 * i, steps=20,
+                            boundary=10) for i in range(3)]
+        eng = study.engine(backend, n_workers=1, batch_siblings=batch,
+                           chain_fusion=fusion)
+        stats = eng.run([GridTuner(trials)])
+        return db.get(study.key), stats
+
+    plan_b, stats_b = run(BatchedChainSimTrainer(), batch=True, fusion=True)
+    plan_s, stats_s = run(SimulatedTrainer(), batch=False, fusion=False)
+
+    assert stats_b.batched_groups >= 1
+    assert stats_b.batched_stages >= 4         # >=2 members x depth 2
+    assert stats_b.chain_fused_stages >= 4
+    assert set(plan_b.nodes) == set(plan_s.nodes)
+    for nid, node in plan_b.nodes.items():
+        assert node.metrics == plan_s.nodes[nid].metrics
+
+
+def test_chain_groups_respect_max_steps_per_chain():
+    """The per-dispatch work cap applies to batched chain groups exactly
+    as to scheduler-extracted chains: no single backend call may exceed
+    it (the cut levels reschedule in later rounds)."""
+    class RecordingBackend(BatchedChainSimTrainer):
+        def __init__(self):
+            super().__init__()
+            self.dispatch_steps = []
+
+        def run_chain(self, state, ctxs):
+            self.dispatch_steps.append(sum(c.stop - c.start for c in ctxs))
+            return super().run_chain(state, ctxs)
+
+        def run_stages_batched(self, states, ctxs):
+            self.dispatch_steps.extend(c.stop - c.start for c in ctxs)
+            return super().run_stages_batched(states, ctxs)
+
+        def run_chains_batched(self, states, chains):
+            self.dispatch_steps.extend(
+                sum(c.stop - c.start for c in ch) for ch in chains)
+            return super().run_chains_batched(states, chains)
+
+    backend = RecordingBackend()
+    db = SearchPlanDB()
+    study = Study.create(db, "m", "d", ("lr",))
+    trials = [seq_trial(0.1 - 0.02 * i, 0.01 - 0.002 * i, steps=20,
+                        boundary=10) for i in range(3)]
+    eng = study.engine(backend, n_workers=1, batch_siblings=True,
+                       chain_fusion=True, max_steps_per_chain=10)
+    stats = eng.run([GridTuner(trials)])
+    assert backend.dispatch_steps and max(backend.dispatch_steps) <= 10
+    assert stats.steps_run == 60                   # everything still ran

@@ -400,3 +400,74 @@ def test_emission_reused_when_resolutions_unchanged():
     plan.submit(Trial(HpConfig({"lr": Constant(0.7)}), 100))
     t3 = builder.build()
     assert t3 is not t1 and len(t3) == len(t1) + 1
+
+
+# ---------------------------------------------------------------------------
+# chain fusion: device-resident carries across stage boundaries
+# ---------------------------------------------------------------------------
+
+
+def const_ctx(start, stop, lr=0.05, bs=None, nid="n0", pk="pk"):
+    hps = {"lr": {"kind": "const", "value": lr}}
+    if bs is not None:
+        hps["bs"] = {"kind": "const", "value": bs}
+    return StageContext(nid, {"hps": hps, "static": {}}, 0, start, stop, pk)
+
+
+def test_run_chain_equals_per_stage_loop_bitwise():
+    """run_chain keeps (params, opt) and the pipeline live across stage
+    boundaries; every boundary snapshot must be bit-identical to the
+    per-stage run_stage loop — including across an epoch wrap (dataset 128
+    / bs 8 wraps at step 16) and a boundary batch-size change."""
+    fused = tiny_backend()
+    ctxs = [const_ctx(0, 7, bs=8), const_ctx(7, 18, bs=8),
+            const_ctx(18, 27, bs=16)]
+    chain_out = fused.run_chain(fused.init_state(), ctxs)
+    state = fused.init_state()
+    for ctx, got in zip(ctxs, chain_out):
+        state = fused.run_stage(state, ctx)
+        assert_states_identical(got, state)
+
+
+def test_run_chain_zero_step_stage_passes_through():
+    fused = tiny_backend()
+    ctxs = [const_ctx(0, 8, bs=8), const_ctx(8, 8, bs=8),
+            const_ctx(8, 12, bs=8)]
+    outs = fused.run_chain(fused.init_state(), ctxs)
+    assert outs[1]["step"] == 8
+    assert_states_identical(outs[0], outs[1])
+    assert outs[2]["step"] == 12
+
+
+def test_run_chains_batched_equals_member_sequential():
+    fused = tiny_backend()
+    chains = [[const_ctx(0, 9, 0.05 - 0.01 * i, nid=f"n{i}", pk=f"pk{i}"),
+               const_ctx(9, 20, 0.05 - 0.01 * i, nid=f"n{i}", pk=f"pk{i}")]
+              for i in range(3)]
+    states = [fused.init_state() for _ in range(3)]
+    outs = fused.run_chains_batched(states, chains)
+    solo = tiny_backend()
+    for st, ch, out in zip(states, chains, outs):
+        ref = solo.run_chain(st, ch)
+        assert len(out) == len(ref) == 2
+        for x, y in zip(out, ref):
+            assert_states_identical(x, y)
+
+
+def test_run_chains_batched_rejects_ragged_depth():
+    fused = tiny_backend()
+    chains = [[const_ctx(0, 8, 0.05, nid="n0", pk="p0"),
+               const_ctx(8, 16, 0.05, nid="n0", pk="p0")],
+              [const_ctx(0, 8, 0.04, nid="n1", pk="p1")]]
+    states = [fused.init_state(), fused.init_state()]
+    import pytest
+    with pytest.raises(ValueError, match="depth"):
+        fused.run_chains_batched(states, chains)
+
+
+def test_run_chain_rejects_non_contiguous_stages():
+    fused = tiny_backend()
+    import pytest
+    with pytest.raises(ValueError, match="contiguous"):
+        fused.run_chain(fused.init_state(),
+                        [const_ctx(0, 8), const_ctx(10, 16)])

@@ -156,6 +156,59 @@ def test_fused_scan_equals_stepwise_bitwise(setup):
     assert {32, 64} <= batch_dims
 
 
+def test_chain_fused_depth4_equals_stepwise_bitwise(setup):
+    """Chain-fused execution (device-resident carry across stage
+    boundaries, write-behind checkpoints) == seed per-step loop, bit for
+    bit, on a depth-4 chain that includes a mid-chain ``report`` boundary
+    (step 12) and a mid-chain batch-size change (step 16)."""
+    fused = setup
+    stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
+                          {k: np.asarray(v) for k, v in fused.eval_batch.items()},
+                          default_optimizer="momentum", fused=False,
+                          backend="cpu")
+
+    trial = Trial(HpConfig({"lr": MultiStep(0.05, [8, 16],
+                                            values=[0.05, 0.02, 0.01]),
+                            "bs": MultiStep(32, [16], values=[32, 64])}), 24)
+
+    class MidChainReportTuner(GridTuner):
+        # both requests pending up front -> ONE chain with a report
+        # boundary at 12 (stages [0,8)[8,12)*[12,16)[16,24)*)
+        def start(self, handle):
+            self.handle = handle
+            for t in self.trials:
+                handle.submit(t, upto=12)
+                handle.submit(t)
+
+        def on_result(self, t, step, metrics):
+            if step == t.total_steps:
+                super().on_result(t, step, metrics)
+
+    db = SearchPlanDB()
+    study = Study.create(db, "resnet8", "synth", ("lr", "bs"))
+    eng = study.engine(fused, n_workers=1)
+    assert eng.chain_fusion
+    tuner = MidChainReportTuner([trial])
+    stats = eng.run([tuner])
+    assert stats.chain_fused_stages >= 4
+    assert stats.ckpt_async_writes >= 4
+    assert eng.store.pending_writes == 0       # shutdown flush barrier
+
+    plan = db.get(study.key)
+    leaf = plan.nodes[plan.trial_paths[trial.trial_id][-1]]
+    merged_params = eng.store.get(leaf.ckpts[24])["params"]
+    solo_state, solo_metrics = straight_through(stepwise, trial, 24)
+    assert leaf.metrics[24]["loss"] == solo_metrics["loss"]
+    assert leaf.metrics[24]["val_acc"] == solo_metrics["val_acc"]
+    for a, b in zip(jax.tree.leaves(merged_params),
+                    jax.tree.leaves(solo_state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the mid-chain report observed the state a stepwise run sees at 12
+    mid = plan.nodes[plan.trial_paths[trial.trial_id][1]]
+    _, mid_metrics = straight_through(stepwise, trial, 12)
+    assert mid.metrics[12] == mid_metrics
+
+
 def test_batched_siblings_equal_stepwise_bitwise(setup):
     """Sibling-trial batching: a group of divergent siblings executed as ONE
     compiled call must reproduce each member's straight-through per-step
