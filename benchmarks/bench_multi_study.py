@@ -1,24 +1,44 @@
-"""Multi-study benchmark — the paper's Figures 13/14 (§6.2).
+"""Multi-study benchmark — the paper's Figures 13/14 (§6.2), plus the
+service plane's staggered-arrival scenario.
 
-S ∈ {1, 2, 4, 8} studies over the same (model, dataset, hp-set) submitted
-concurrently; studies share one search plan, so inter-study redundancy is
-eliminated.  Two space families: high merge (Figure 13) and low merge
-(Figure 14).  Reports k-wise merge rate q and trial/stage savings.
+Upfront: S ∈ {1, 2, 4, 8} studies over the same (model, dataset, hp-set)
+submitted concurrently; studies share one search plan, so inter-study
+redundancy is eliminated.  Two space families: high merge (Figure 13) and
+low merge (Figure 14).  Reports k-wise merge rate q and trial/stage
+savings.
+
+Staggered: the same S=4 high-merge studies submitted to ONE long-lived
+:class:`StudyService` with one arrival per simulated hour — the
+continuous-traffic setting (PipeTune-style dynamic job arrival).  Late
+arrivals must merge into the in-flight stage forest: the staggered
+``gpuh_saving`` stays close to the upfront row's, and the salted baseline
+shows what a batch-only API would cost.  Rows land in
+``BENCH_multistudy.json`` via ``benchmarks/run.py`` (CI artifact).
 """
 
 from __future__ import annotations
 
+import json
 from typing import Callable, List
 
 from benchmarks.spaces import (resnet20_space_high_merge,
                                resnet20_space_low_merge)
-from repro.core import SearchPlanDB, Study, k_wise_merge_rate, run_studies
+from repro.core import (SearchPlanDB, Study, StudyService, StudySpec,
+                        k_wise_merge_rate, run_studies)
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridTuner
 
 N_WORKERS = 40
 MAX_STEPS = 160
 SEC_PER_STEP = 60.0
+ARRIVAL_GAP = 3600.0   # staggered scenario: one study per simulated hour
+SPEC = StudySpec("resnet20", "cifar10", ("lr", "bs"))
+
+
+def _backend():
+    return SimulatedTrainer(base_seconds_per_step=SEC_PER_STEP,
+                            horizon=MAX_STEPS, load_seconds=30.0,
+                            save_seconds=30.0, eval_seconds=60.0)
 
 
 def run_multi(space_fn: Callable, n_studies: int, share: bool):
@@ -27,10 +47,32 @@ def run_multi(space_fn: Callable, n_studies: int, share: bool):
     for i in range(n_studies):
         st = Study.create(db, "resnet20", "cifar10", ("lr", "bs"))
         pairs.append((st, GridTuner(space_fn(seed=i).trials(MAX_STEPS))))
-    backend = SimulatedTrainer(base_seconds_per_step=SEC_PER_STEP,
-                               horizon=MAX_STEPS, load_seconds=30.0,
-                               save_seconds=30.0, eval_seconds=60.0)
-    return run_studies(pairs, backend, n_workers=N_WORKERS, share=share)
+    return run_studies(pairs, _backend(), n_workers=N_WORKERS, share=share)
+
+
+def run_staggered(space_fn: Callable, n_studies: int, share: bool,
+                  gap: float = ARRIVAL_GAP):
+    """One long-lived service session; study i arrives at virtual i*gap."""
+    db = SearchPlanDB()
+    svc = StudyService(db, _backend(), n_workers=N_WORKERS, share=share)
+    futs = [svc.submit(SPEC, GridTuner(space_fn(seed=i).trials(MAX_STEPS)),
+                       at=i * gap)
+            for i in range(n_studies)]
+    stats = svc.close()
+    assert all(f.done() for f in futs)
+    return stats
+
+
+def _row(label: str, scenario: str, S: int, trial_sets: List, t, s):
+    return {
+        "space": label, "scenario": scenario, "S": S,
+        "n_trials": sum(len(x) for x in trial_sets),
+        "q": round(k_wise_merge_rate(trial_sets), 3),
+        "gpuh_trial": round(t.gpu_hours, 1),
+        "gpuh_stage": round(s.gpu_hours, 1),
+        "gpuh_saving": round(t.gpu_seconds / s.gpu_seconds, 2),
+        "e2e_saving": round(t.end_to_end / s.end_to_end, 2),
+    }
 
 
 def main(csv: bool = True):
@@ -40,24 +82,29 @@ def main(csv: bool = True):
         for S in (1, 2, 4, 8):
             trial_sets: List = [space_fn(seed=i).trials(MAX_STEPS)
                                 for i in range(S)]
-            q = k_wise_merge_rate(trial_sets)
             t = run_multi(space_fn, S, share=False)
             s = run_multi(space_fn, S, share=True)
-            rows.append({
-                "space": label, "S": S,
-                "n_trials": sum(len(x) for x in trial_sets),
-                "q": round(q, 3),
-                "gpuh_trial": round(t.gpu_hours, 1),
-                "gpuh_stage": round(s.gpu_hours, 1),
-                "gpuh_saving": round(t.gpu_seconds / s.gpu_seconds, 2),
-                "e2e_saving": round(t.end_to_end / s.end_to_end, 2),
-            })
+            rows.append(_row(label, "upfront", S, trial_sets, t, s))
+    # staggered arrivals through the service session (S=4, high merge): the
+    # reuse the live forest retains for late arrivals vs the salted baseline
+    S = 4
+    trial_sets = [resnet20_space_high_merge(seed=i).trials(MAX_STEPS)
+                  for i in range(S)]
+    t = run_staggered(resnet20_space_high_merge, S, share=False)
+    s = run_staggered(resnet20_space_high_merge, S, share=True)
+    rows.append(_row("high-merge", "staggered", S, trial_sets, t, s))
     if csv:
         keys = list(rows[0])
         print(",".join(keys))
         for r in rows:
             print(",".join(str(r[k]) for k in keys))
     return rows
+
+
+def dump_json(rows, path: str = "BENCH_multistudy.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "multistudy", "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
 
 
 if __name__ == "__main__":

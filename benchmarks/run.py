@@ -4,9 +4,10 @@
 blocks; individual benches are importable modules with ``main()``.  The
 control-plane rows land in ``BENCH_stagetree.json`` (gated against the
 committed baseline by ``check_stagetree_trend.py``), the data-plane rows
-in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``) and
-the Pallas kernel rows in ``BENCH_kernels.json``, so the perf trajectory
-is tracked across PRs (CI uploads all three as artifacts).
+in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``), the
+Pallas kernel rows in ``BENCH_kernels.json`` and the multi-study
+upfront/staggered rows in ``BENCH_multistudy.json``, so the perf
+trajectory is tracked across PRs (CI uploads all four as artifacts).
 """
 
 from __future__ import annotations
@@ -35,7 +36,8 @@ def main() -> None:
         ("kernel allclose + timing", bench_kernels),
         ("single-study: trial vs stage (Figure 12 / Table 5)",
          bench_single_study),
-        ("multi-study S1/S2/S4/S8 (Figures 13-14)", bench_multi_study),
+        ("multi-study S1/S2/S4/S8 + staggered service (Figures 13-14)",
+         bench_multi_study),
     ]
     for title, mod in sections:
         print(f"\n## {title}")
@@ -43,10 +45,8 @@ def main() -> None:
         rows = mod.main()
         if mod is bench_stagetree:
             dump_stagetree_json(rows)
-        elif mod is bench_dataplane:
-            bench_dataplane.dump_json(rows)
-        elif mod is bench_kernels:
-            bench_kernels.dump_json(rows)
+        elif rows and hasattr(mod, "dump_json"):
+            mod.dump_json(rows)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,16 @@
 """Quickstart: a Hippo study in ~40 lines (simulated cluster).
 
-Defines a search space of learning-rate *sequences* (Figure 10 style),
-runs it grid-style on a simulated 8-GPU cluster twice — trial-based
-(the Ray Tune baseline) and stage-based (Hippo) — and prints the savings.
+Defines a search space of learning-rate *sequences* (Figure 10 style) and
+submits it to a :class:`StudyService` session on a simulated 8-GPU cluster
+twice — trial-based (the Ray Tune baseline) and stage-based (Hippo) — and
+prints the savings.  The service is the long-lived entry point; a one-shot
+study is just a session with a single submission.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import (Constant, Exponential, MultiStep, SearchPlanDB,
-                        StepLR, Study, Warmup, merge_rate)
+                        StepLR, StudyService, StudySpec, Warmup, merge_rate)
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridSearchSpace, GridTuner
 
@@ -27,13 +29,15 @@ def main():
     trials = space.trials(200)
     print(f"{len(trials)} trials, merge rate p = {merge_rate(trials):.3f}")
 
+    spec = StudySpec("resnet56", "cifar10", ("lr", "bs", "wd"))
     for share, label in ((False, "trial-based (Ray Tune analogue)"),
                          (True, "stage-based (Hippo)")):
         db = SearchPlanDB()
-        study = Study.create(db, "resnet56", "cifar10", ("lr", "bs", "wd"))
-        tuner = GridTuner(list(trials))
-        stats = study.run(tuner, SimulatedTrainer(base_seconds_per_step=60),
-                          n_workers=8, share=share)
+        svc = StudyService(db, SimulatedTrainer(base_seconds_per_step=60),
+                           n_workers=8, share=share)
+        fut = svc.submit(spec, GridTuner(list(trials)))
+        stats = svc.close()
+        assert fut.done()
         print(f"{label:35s} GPU-hours {stats.gpu_hours:7.2f}   "
               f"end-to-end {stats.end_to_end / 3600:5.2f} h   "
               f"steps trained {stats.steps_run}")

@@ -13,8 +13,9 @@ from repro.core.scheduler import (POLICIES, CriticalPathScheduler,
                                   FIFOScheduler, FairShareScheduler,
                                   SchedulingPolicy, WeightedFanoutScheduler,
                                   make_policy)
-from repro.core.engine import EngineStats, ExecutionEngine, Tuner
+from repro.core.engine import EngineStats, ExecutionEngine, StudyStats, Tuner
 from repro.core.trainer import SimulatedTrainer, StageContext, TrainerBackend
-from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps
 from repro.core.db import SearchPlanDB, study_key
-from repro.core.study import Study, run_studies
+from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps
+from repro.core.study import (Study, StudyFuture, StudyService, StudySpec,
+                              run_studies)

@@ -42,6 +42,12 @@ class SearchPlanDB:
                 self._plans[key] = SearchPlan(key)
         return self._plans[key]
 
+    def put(self, key: str, plan: SearchPlan) -> None:
+        """Install a live plan under ``key`` (session restore: the revived
+        plan object — revision map, pending index, running marks — replaces
+        whatever a journal reload would have produced)."""
+        self._plans[key] = plan
+
     def checkpoint(self, key: str) -> None:
         """Journal a plan to disk (called by the aggregator after updates)."""
         path = self._path(key)

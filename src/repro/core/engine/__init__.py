@@ -9,14 +9,23 @@ Layout (the former 326-line ``core/engine.py`` monolith, split):
   checkpoint GC,
 * :mod:`~repro.core.engine.engine`     — the public :class:`ExecutionEngine`
   facade (API-compatible with the old module: same constructor, ``run()``,
-  ``handle()``).
+  ``handle()``) plus the re-entrant session loop (``step`` / ``drain`` /
+  ``admit`` / ``cancel_study`` / ``finish``) the service plane drives,
+* :mod:`~repro.core.engine.session`    — durable session snapshots
+  (:class:`SessionState`, capture/restore) behind
+  ``StudyService.snapshot`` / ``StudyService.restore``.
 """
 
 from repro.core.engine.engine import (EngineStats, ExecutionEngine,
-                                      StudyHandle, Tuner)
+                                      StudyHandle, StudyStats, Tuner)
 from repro.core.engine.events import Event, EventLoop
 from repro.core.engine.dispatch import Dispatcher, Worker
 from repro.core.engine.aggregator import Aggregator
+from repro.core.engine.session import (SessionState, capture_session,
+                                       load_session, restore_engine,
+                                       save_session)
 
 __all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats",
-           "Event", "EventLoop", "Dispatcher", "Worker", "Aggregator"]
+           "StudyStats", "Event", "EventLoop", "Dispatcher", "Worker",
+           "Aggregator", "SessionState", "capture_session", "restore_engine",
+           "save_session", "load_session"]

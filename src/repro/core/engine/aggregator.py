@@ -62,6 +62,23 @@ class Aggregator:
         if p["last"]:
             self.events.push(self.events.time, "idle", p["worker"])
 
+    def detach_study(self, study_id: str) -> None:
+        """Cancel path: drop every waiter belonging to ``study_id`` and
+        withdraw the pending requests no other study's waiter still wants
+        (running and satisfied steps are left alone — in-flight work
+        completes and records normally).  Trials the study shares with
+        live studies survive; the engine kills the rest separately."""
+        for key in list(self.waiters):
+            ws = self.waiters[key]
+            ws[:] = [(h, t) for (h, t) in ws if h.study_id != study_id]
+            if not ws:
+                del self.waiters[key]
+                nid, step = key
+                node = self.plan.nodes[nid]
+                if (step in node.requests and step not in node.running
+                        and step not in node.metrics):
+                    self.plan.drop_request(nid, step)
+
     # ------------------------------------------------------------------ kill
     def kill(self, trial_id: str) -> None:
         """Release a trial: drop its refs, cancel requests nobody else

@@ -188,6 +188,27 @@ class Dispatcher:
         self.stats.ckpt_saves += 1
         return cid
 
+    # ------------------------------------------------------ study accounting
+    def _credit_stage(self, st: Stage, dur: float) -> None:
+        """Per-study breakdown (``EngineStats.by_study``): split the
+        stage's execution seconds evenly across the studies it serves
+        (reuse is free capacity — each sharing study pays 1/k), but count
+        ``steps_run``/``stages_run`` in full per serving study, so the
+        per-study step sums exceed the physical total exactly when stages
+        are shared.  Work with no study attribution (direct
+        ``plan.submit`` without ``study=``) is left out of the breakdown."""
+        studies = set()
+        for tid in self.plan.node(st.node_id).trials:
+            studies |= self.plan.studies_of_trial(tid)
+        if not studies:
+            return
+        share = dur * self.gpus_per_worker / len(studies)
+        for s in sorted(studies):
+            ss = self.stats.study(s)
+            ss.gpu_seconds += share
+            ss.stages_run += 1
+            ss.steps_run += st.steps
+
     def _ctx_for(self, st: Stage) -> StageContext:
         node = self.plan.node(st.node_id)
         return StageContext(
@@ -272,6 +293,7 @@ class Dispatcher:
             self.stats.gpu_seconds += dur * self.gpus_per_worker
             self.stats.stages_run += 1
             self.stats.steps_run += st.steps
+            self._credit_stage(st, dur)
 
             if st.steps > 0:
                 self.plan.record_profile(
@@ -338,6 +360,7 @@ class Dispatcher:
             self.stats.gpu_seconds += dur * self.gpus_per_worker
             self.stats.stages_run += 1
             self.stats.steps_run += st.steps
+            self._credit_stage(st, dur)
             if fused:
                 self.stats.chain_fused_stages += 1
             produced[st.stage_id] = (s, t)
@@ -447,12 +470,17 @@ class Dispatcher:
             dur = (lvl_wall if any(s is None for s in lvl_sims)
                    else sum(lvl_sims))
             for m, st in enumerate(level):
+                member_dur = (lvl_sims[m] if lvl_sims[m] is not None
+                              else lvl_wall / len(members))
                 if st.report:
                     dur += getattr(self.backend, "eval_seconds", 0.0)
+                    member_dur += getattr(self.backend, "eval_seconds", 0.0)
                     self.stats.evals_run += 1
                 dur += save_s  # checkpoint per member at the stage boundary
+                member_dur += save_s
                 self.stats.stages_run += 1
                 self.stats.steps_run += st.steps
+                self._credit_stage(st, member_dur)
                 if fused_chain:
                     self.stats.chain_fused_stages += 1
                 if st.steps > 0:

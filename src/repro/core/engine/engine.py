@@ -22,9 +22,30 @@ components and keeps the seed module's public API:
   clock are unchanged,
 * **tuners** observe metrics and submit/kill trials, closing the HPO loop.
 
+Session model (service plane): the engine is a **long-lived session**, not
+a batch call.  :meth:`step` processes exactly one event and re-runs the
+dispatcher — the re-entrant unit the :class:`~repro.core.study.StudyService`
+drives.  *Quiescence* (``quiescent``: the event heap is empty — nothing
+running, nothing scheduled) is distinct from *termination* (:meth:`finish`:
+the write-behind store flushed, ``end_to_end`` stamped): a quiescent
+session stays open for late arrivals.  :meth:`admit` schedules a tuner's
+arrival as an ``admit`` event on the virtual clock, so a study submitted
+mid-drain wakes the dispatcher and merges into the in-flight stage forest
+instead of requiring a fresh ``run()``.  Consecutive admissions at the
+same virtual time start together before the next scheduling round —
+upfront submission through the session is event-for-event identical to the
+legacy batch ``run(tuners)``.  :meth:`cancel_study` detaches a study
+mid-run: its waiters are dropped, and trials no other live study shares
+are killed, releasing their plan nodes into checkpoint GC.
+
 Accounting matches the paper's two measurements: ``gpu_seconds`` (sum of
 busy time × GPUs per worker) and ``end-to-end`` time (virtual clock at
 completion), plus ``ckpt_evictions`` for the beyond-paper checkpoint GC.
+``EngineStats.by_study`` breaks execution down per study: a shared stage's
+cost is split evenly across the studies it serves (reuse is free capacity),
+while ``steps_run`` counts every step advanced *on behalf of* the study —
+so the per-study step sums exceed the physical ``steps_run`` exactly when
+stages are shared.
 
 ``share=False`` turns the engine into the **trial-based baseline**
 (Ray Tune / "Hippo-trial"): every submitted trial is salted so its plan
@@ -36,8 +57,8 @@ Ray Tune trial.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
 
 from repro.core.hpseq import HpConfig
 from repro.core.scheduler import CriticalPathScheduler, SchedulingPolicy
@@ -50,7 +71,8 @@ from repro.core.trainer import TrainerBackend
 from repro.core.trial import Trial
 from repro.train.checkpoint import CheckpointStore
 
-__all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats"]
+__all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats",
+           "StudyStats"]
 
 
 class Tuner:
@@ -88,6 +110,34 @@ class StudyHandle:
     def kill(self, trial: Trial) -> None:
         self.engine._kill(self, trial)
 
+    def __getstate__(self):
+        # session snapshots never capture the engine (it holds the backend
+        # and the store's writer thread); StudyService.restore re-wires it
+        d = self.__dict__.copy()
+        d["engine"] = None
+        return d
+
+
+@dataclass
+class StudyStats:
+    """Per-study slice of the engine accounting.
+
+    ``gpu_seconds`` is the study's *split share* of stage execution time
+    (a stage serving k studies charges each 1/k — reuse shows up as each
+    study paying less), excluding resume-load overheads.  ``steps_run`` /
+    ``stages_run`` count work advanced **on behalf of** the study in full,
+    so their sum across studies exceeds the engine totals exactly when
+    stages are shared.  ``instant_results`` counts requests answered
+    straight from already-present plan metrics (§3.2's immediate response
+    — the purest form of cross-study reuse a late arrival sees).
+    """
+
+    gpu_seconds: float = 0.0
+    steps_run: int = 0
+    stages_run: int = 0
+    trials: int = 0
+    instant_results: int = 0
+
 
 @dataclass
 class EngineStats:
@@ -108,10 +158,14 @@ class EngineStats:
     ckpt_async_writes: int = 0    # write-behind boundary checkpoints
     ckpt_save_seconds: float = 0.0  # synchronous slice of store puts
     ckpt_load_seconds: float = 0.0  # store gets (resume loads)
+    by_study: Dict[str, StudyStats] = field(default_factory=dict)
 
     @property
     def gpu_hours(self) -> float:
         return self.gpu_seconds / 3600.0
+
+    def study(self, study_id: str) -> StudyStats:
+        return self.by_study.setdefault(study_id, StudyStats())
 
 
 class ExecutionEngine:
@@ -157,6 +211,9 @@ class ExecutionEngine:
         self.aggregator = Aggregator(plan, self.store, self.stats, self.events)
         self._trials: Dict[str, Trial] = {}
         self._handles: List[StudyHandle] = []
+        self._study_trials: Dict[str, Set[str]] = {}
+        self._started: Set[str] = set()      # study ids whose tuner ran start()
+        self._cancelled: Set[str] = set()    # study ids detached by cancel
 
     # ------------------------------------------------------------ properties
     @property
@@ -164,30 +221,50 @@ class ExecutionEngine:
         """Virtual clock (owned by the event loop)."""
         return self.events.time
 
+    @property
+    def quiescent(self) -> bool:
+        """True when nothing is running or scheduled (the event heap is
+        empty).  Quiescence is NOT termination: a quiescent session stays
+        open — a later :meth:`admit` wakes it again."""
+        return not self.events
+
     # ------------------------------------------------------------------ API
-    def handle(self, tuner: Tuner, study_id: str = None) -> StudyHandle:
+    def handle(self, tuner: Tuner, study_id: Optional[str] = None) -> StudyHandle:
         h = StudyHandle(self, tuner, study_id or f"study-{len(self._handles)}")
         self._handles.append(h)
         return h
 
+    def admit(self, tuner: Tuner, study_id: Optional[str] = None,
+              at: Optional[float] = None) -> StudyHandle:
+        """Schedule a study's arrival on the virtual clock (service plane).
+
+        The tuner starts when the ``admit`` event fires — at ``max(at,
+        now)`` — and the dispatcher immediately merges its requests into
+        the in-flight stage forest.  Admissions landing at the same
+        virtual time start together before the next scheduling round, so
+        a batch admitted at the current time is indistinguishable from a
+        legacy ``run([tuners])``."""
+        h = self.handle(tuner, study_id)
+        t = self.events.time if at is None else max(at, self.events.time)
+        self.events.push(t, "admit", h)
+        return h
+
     def run(self, tuners: List[Tuner]) -> EngineStats:
-        """Run tuners to completion; returns accounting stats."""
+        """One-shot session: run tuners to completion; returns stats."""
         handles = [self.handle(t) for t in tuners]
         for h in handles:
-            h.tuner.start(h)
+            self._start_handle(h)
         try:
-            self._drain()
-            not_done = [h.tuner for h in handles if not h.tuner.is_done()]
+            self.drain()
+            not_done = [h.tuner for h in handles
+                        if h.study_id not in self._cancelled
+                        and not h.tuner.is_done()]
             if not_done:
                 raise RuntimeError(
                     f"engine drained but {len(not_done)} tuner(s) not done — "
                     "a tuner is waiting on a request that was never submitted")
         finally:
-            # write-behind barrier: every pending boundary checkpoint must
-            # be durably committed (and writer failures surfaced) even on
-            # an error exit — the plan already records those cids
-            self.store.flush()
-        self.stats.end_to_end = self.events.time
+            self.finish()
         return self.stats
 
     # ------------------------------------------------------------- internal
@@ -207,11 +284,16 @@ class ExecutionEngine:
                 upto: Optional[int]) -> None:
         trial = self._salted(trial, handle.study_id)
         self._trials[trial.trial_id] = trial
+        owned = self._study_trials.setdefault(handle.study_id, set())
+        if trial.trial_id not in owned:
+            owned.add(trial.trial_id)
+            self.stats.study(handle.study_id).trials += 1
         node, step, satisfied = self.plan.submit(trial, upto,
                                                  study=handle.study_id)
         if satisfied:
             # §3.2: results already present → respond immediately (still an
             # event so tuner callbacks observe a consistent clock).
+            self.stats.study(handle.study_id).instant_results += 1
             metrics = self.plan.metrics_for(node.node_id, step)
             self.events.push(self.events.time, "reply",
                              (handle, trial, step, metrics))
@@ -221,16 +303,68 @@ class ExecutionEngine:
     def _kill(self, handle: StudyHandle, trial: Trial) -> None:
         self.aggregator.kill(trial.trial_id)
 
+    # ----------------------------------------------------------- cancellation
+    def cancel_study(self, study_id: str) -> None:
+        """Detach a study mid-run: drop its waiters, and kill every trial
+        no other live study shares — releasing their plan nodes into
+        checkpoint GC.  Nodes (and trials) another study still references
+        are untouched; in-flight stages keep running, and results landing
+        on nodes the cancel left unreferenced are evicted on arrival."""
+        if study_id in self._cancelled:
+            return
+        self._cancelled.add(study_id)
+        self.aggregator.detach_study(study_id)
+        for tid in sorted(self._study_trials.get(study_id, ())):
+            self.plan.detach_study(tid, study_id)
+            if not self.plan.studies_of_trial(tid) - self._cancelled:
+                self.aggregator.kill(tid)
+
     # ------------------------------------------------------------ main loop
-    def _drain(self) -> None:
-        self.dispatcher.assign()
-        while self.events:
-            ev = self.events.pop()
-            if ev.kind == "stage":
-                self.aggregator.on_stage_done(ev.payload)
-            elif ev.kind == "reply":
-                handle, trial, step, metrics = ev.payload
+    def step(self) -> bool:
+        """Process exactly one event, then re-run the dispatcher.  The
+        re-entrant unit of the session loop — returns False at quiescence
+        (nothing left to do until the next admission)."""
+        if not self.events:
+            return False
+        ev = self.events.pop()
+        if ev.kind == "stage":
+            self.aggregator.on_stage_done(ev.payload)
+        elif ev.kind == "reply":
+            handle, trial, step, metrics = ev.payload
+            if (trial.trial_id not in self.aggregator.killed
+                    and handle.study_id not in self._cancelled):
                 handle.tuner.on_result(trial, step, metrics)
-            elif ev.kind == "idle":
-                self.workers[ev.payload].idle = True
-            self.dispatcher.assign()
+        elif ev.kind == "idle":
+            self.workers[ev.payload].idle = True
+        elif ev.kind == "admit":
+            # start every admission landing at this instant before the next
+            # scheduling round: same-time arrivals merge as one batch,
+            # making upfront service submission identical to run(tuners)
+            self._start_handle(ev.payload)
+            while self.events:
+                nxt = self.events.peek()
+                if nxt.kind != "admit" or nxt.time > self.events.time:
+                    break
+                self._start_handle(self.events.pop().payload)
+        self.dispatcher.assign()
+        return True
+
+    def drain(self) -> None:
+        """Run to quiescence (the legacy ``_drain`` loop, re-entrant)."""
+        self.dispatcher.assign()
+        while self.step():
+            pass
+
+    def finish(self) -> EngineStats:
+        """Terminate the session: barrier the write-behind store (every
+        pending boundary checkpoint durably committed, writer failures
+        surfaced) and stamp ``end_to_end``.  Idempotent."""
+        self.store.flush()
+        self.stats.end_to_end = self.events.time
+        return self.stats
+
+    def _start_handle(self, h: StudyHandle) -> None:
+        if h.study_id in self._cancelled or h.study_id in self._started:
+            return
+        self._started.add(h.study_id)
+        h.tuner.start(h)

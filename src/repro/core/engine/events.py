@@ -42,6 +42,10 @@ class EventLoop:
         self.time = max(self.time, ev.time)
         return ev
 
+    def peek(self) -> Optional[Event]:
+        """The earliest event without popping it (None when empty)."""
+        return self._events[0] if self._events else None
+
     def __bool__(self) -> bool:
         return bool(self._events)
 

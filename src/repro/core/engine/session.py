@@ -1,0 +1,200 @@
+"""Durable engine sessions — snapshot/restore for the service plane.
+
+A :class:`SessionState` is the complete picklable state of one live
+:class:`~repro.core.engine.engine.ExecutionEngine` session at an event
+boundary: the search plan (with revision map, pending index and running
+marks), the event heap and virtual clock, the waiter table, per-study
+accounting, the scheduling policy (with its fair-share usage memory), the
+worker states, and the committed-checkpoint index.  What it deliberately
+does NOT contain:
+
+* the **backend** (real trainers hold devices/executables) — re-supplied
+  at restore,
+* the **store object** (its write-behind writer thread is unpicklable) —
+  the snapshot records the committed cid index instead, plus the raw
+  cid→tree map when the store is memory-backed, so a restored in-memory
+  session resumes with every checkpoint it had; directory stores are
+  already durable on disk,
+* transient scheduling state — the stage-tree builder is a pure memo over
+  the plan and is rebuilt cold (identical trees, Algorithm 1 is a pure
+  function of the plan).
+
+``capture_session`` flushes the write-behind store first, so the snapshot
+is a durability barrier: everything the plan records is committed at the
+moment of capture.  On restore, plan checkpoint entries whose blob the
+(possibly different) store cannot serve are forgotten up front — exactly
+the recompute-on-miss degradation, applied eagerly — so a killed service
+recomputes nothing beyond the write-behind puts that had not committed by
+the last snapshot.
+
+Snapshots must be taken at an event boundary (between ``engine.step()``
+calls — the :class:`~repro.core.study.StudyService` enforces this): at
+that point no dispatchable work is in limbo, so the event heap plus the
+plan are the whole truth.  Restoring replays the identical event stream —
+final :class:`~repro.core.engine.engine.EngineStats` (including the
+per-study breakdown) are equal to an uninterrupted run's.
+
+The on-disk format is a versioned pickle (``SESSION_FORMAT_VERSION``);
+tuners and trials therefore must be picklable.  ``StudyHandle`` /
+``StudyFuture`` drop their engine/service references when pickled and are
+re-wired on restore.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.core.engine.events import EventLoop
+from repro.core.scheduler import SchedulingPolicy
+from repro.core.searchplan import SearchPlan
+from repro.core.trainer import TrainerBackend
+from repro.train.checkpoint import CheckpointStore
+
+__all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
+           "restore_engine", "save_session", "load_session"]
+
+SESSION_FORMAT_VERSION = 1
+
+
+@dataclass
+class SessionState:
+    """Picklable engine-session state (see module docstring for scope)."""
+
+    version: int
+    plan_key: str
+    # ---- engine construction knobs ----
+    n_workers: int
+    gpus_per_worker: int
+    share: bool
+    max_steps_per_chain: Optional[int]
+    batch_siblings: bool
+    chain_fusion: bool
+    # ---- live session state ----
+    plan: SearchPlan
+    events: EventLoop
+    scheduler: SchedulingPolicy
+    stats: Any                                   # EngineStats
+    workers: List[Tuple[int, float, bool]]       # (wid, busy_until, idle)
+    waiters: Dict[Tuple[str, int], List[Tuple[Any, Any]]]
+    killed: Set[str]
+    trials: Dict[str, Any]
+    handles: List[Any]                           # StudyHandle (engine=None)
+    study_trials: Dict[str, Set[str]]
+    started: Set[str]
+    cancelled: Set[str]
+    # ---- committed-checkpoint index ----
+    store_cids: Set[str] = field(default_factory=set)
+    store_mem: Optional[Dict[str, Any]] = None   # memory-backed stores only
+    # ---- service plane (opaque to the engine) ----
+    service: Dict[str, Any] = field(default_factory=dict)
+
+
+def capture_session(engine, service: Optional[Dict[str, Any]] = None
+                    ) -> SessionState:
+    """Freeze a live engine into a :class:`SessionState`.  Flushes the
+    write-behind store (durability barrier) before indexing it."""
+    engine.store.flush()
+    return SessionState(
+        version=SESSION_FORMAT_VERSION,
+        plan_key=engine.plan.key,
+        n_workers=len(engine.workers),
+        gpus_per_worker=engine.gpus_per_worker,
+        share=engine.share,
+        max_steps_per_chain=engine.max_steps_per_chain,
+        batch_siblings=engine.batch_siblings,
+        chain_fusion=engine.chain_fusion,
+        plan=engine.plan,
+        events=engine.events,
+        scheduler=engine.scheduler,
+        stats=engine.stats,
+        workers=[(w.wid, w.busy_until, w.idle) for w in engine.workers],
+        waiters=engine.aggregator.waiters,
+        killed=engine.aggregator.killed,
+        trials=engine._trials,
+        handles=engine._handles,
+        study_trials=engine._study_trials,
+        started=engine._started,
+        cancelled=engine._cancelled,
+        store_cids=engine.store.committed_ids(),
+        store_mem=engine.store.snapshot_trees(),
+        service=dict(service or {}),
+    )
+
+
+def restore_engine(state: SessionState, backend: TrainerBackend,
+                   store: Optional[CheckpointStore] = None):
+    """Rebuild a live engine from ``state`` + a fresh backend/store.
+
+    The restored engine continues the exact event stream of the captured
+    one: same plan object graph, same heap, same clock, same accounting.
+    Plan checkpoint entries the supplied store cannot serve are forgotten
+    eagerly (recompute-on-miss, applied up front), so a store that lost
+    blobs since the snapshot degrades to recomputation instead of
+    KeyErrors."""
+    from repro.core.engine.engine import ExecutionEngine  # cycle-free import
+
+    if state.version != SESSION_FORMAT_VERSION:
+        raise ValueError(
+            f"session format v{state.version} is not v{SESSION_FORMAT_VERSION}"
+            " — re-snapshot with the matching repro version")
+    if store is None:
+        store = CheckpointStore()
+    if state.store_mem is not None and not store.directory:
+        store.load_trees(state.store_mem)
+
+    eng = ExecutionEngine(
+        state.plan, backend, n_workers=state.n_workers,
+        gpus_per_worker=state.gpus_per_worker, scheduler=state.scheduler,
+        store=store, share=state.share,
+        max_steps_per_chain=state.max_steps_per_chain,
+        batch_siblings=state.batch_siblings, chain_fusion=state.chain_fusion)
+
+    # splice the captured session state into the freshly wired components —
+    # the dispatcher/aggregator hold references, so patch both sides
+    eng.events = state.events
+    eng.stats = state.stats
+    eng.dispatcher.events = state.events
+    eng.dispatcher.stats = state.stats
+    eng.aggregator.events = state.events
+    eng.aggregator.stats = state.stats
+    eng.aggregator.waiters = state.waiters
+    eng.aggregator.killed = state.killed
+    for w, (wid, busy_until, idle) in zip(eng.workers, state.workers):
+        w.wid, w.busy_until, w.idle = wid, busy_until, idle
+    eng._trials = state.trials
+    eng._handles = state.handles
+    eng._study_trials = state.study_trials
+    eng._started = state.started
+    eng._cancelled = state.cancelled
+    for h in state.handles:
+        h.engine = eng
+
+    # eager recompute-on-miss: forget plan checkpoints the store lost
+    # (anything written after the snapshot's flush barrier, or an external
+    # eviction between snapshot and restore)
+    for nid, node in state.plan.nodes.items():
+        for step, cid in list(node.ckpts.items()):
+            if cid not in state.store_cids or not store.contains(cid):
+                state.plan.forget_ckpt(nid, step)
+    return eng
+
+
+# ---------------------------------------------------------------- file I/O
+def save_session(state: SessionState, path: str) -> str:
+    """Atomically pickle ``state`` to ``path`` (tmp + rename)."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(state, f)
+    os.replace(tmp, path)
+    return path
+
+
+def load_session(path: str) -> SessionState:
+    with open(path, "rb") as f:
+        state = pickle.load(f)
+    if not isinstance(state, SessionState):
+        raise ValueError(f"{path!r} is not a repro session snapshot")
+    return state

@@ -207,14 +207,16 @@ class FIFOScheduler(SchedulingPolicy):
 class FairShareScheduler(CriticalPathScheduler):
     """Per-study fair share for concurrent studies on one plan (§6.2).
 
-    Each extracted stage is charged (its estimated GPU-seconds) to every
-    study whose trials it serves; candidate heads are ranked by the
+    Each extracted stage's estimated GPU-seconds are **split** across the
+    studies whose trials it serves — a stage shared by k studies charges
+    each of them 1/k, so reuse shows up as every sharing study paying
+    less, and a study that merges heavily cannot be priced out of the
+    cluster by costs it never caused.  Candidate heads are ranked by the
     *least-served* study they would serve, with critical-path remaining
-    time as tie-break.  Shared stages count toward every sharing study —
-    reuse is free capacity, so it is credited to all of them.  Stages the
-    dispatcher could not actually run this round (truncated tails, deferred
-    chains) are refunded via ``on_stages_unassigned`` so rescheduling does
-    not double-charge.
+    time as tie-break.  Stages the dispatcher could not actually run this
+    round (truncated tails, deferred chains, collapsed sibling groups)
+    are refunded via ``on_stages_unassigned`` with the same split, so
+    rescheduling never double-charges.
     """
 
     name = "fair_share"
@@ -251,8 +253,14 @@ class FairShareScheduler(CriticalPathScheduler):
     def _charge(self, plan: SearchPlan, stages: List[Stage],
                 sign: float) -> None:
         for st in stages:
-            cost = sign * self.stage_time(plan, st)
-            for s in self._studies_of(plan, st):
+            studies = self._studies_of(plan, st)
+            if not studies:
+                continue
+            # split-charge: a chain shared by k studies costs each 1/k —
+            # refunds (sign=-1) recompute the same split, so a stage
+            # charged and refunded within one round nets to exactly zero
+            cost = sign * self.stage_time(plan, st) / len(studies)
+            for s in studies:
                 self.usage[s] = self.usage.get(s, 0.0) + cost
 
     def on_path_assigned(self, plan: SearchPlan, path: List[Stage]) -> None:

@@ -393,6 +393,17 @@ class SearchPlan:
             self._touch(node_id)
         return cid
 
+    def detach_study(self, trial_id: str, study: str) -> None:
+        """Remove one study's attribution from a trial (service-plane
+        cancel).  The trial itself survives if other studies submitted it;
+        fair-share and per-study accounting stop crediting the detached
+        study from here on."""
+        studies = self.trial_studies.get(trial_id)
+        if studies is not None:
+            studies.discard(study)
+            if not studies:
+                del self.trial_studies[trial_id]
+
     def studies_of_trial(self, trial_id: str) -> Set[str]:
         return self.trial_studies.get(trial_id, set())
 

@@ -285,6 +285,28 @@ class CheckpointStore:
     def contains(self, cid: str) -> bool:
         return self._known(cid)
 
+    # ---------------------------------------------------- session persistence
+    def committed_ids(self) -> set:
+        """Ids of every durably-committed checkpoint (session snapshots:
+        call :meth:`flush` first so nothing is left pending)."""
+        with self._cv:
+            ids = set(self._pending) - self._cancelled
+        ids |= set(self._mem)
+        if self.directory:
+            ids |= {f[:-len(".ckpt")] for f in os.listdir(self.directory)
+                    if f.endswith(".ckpt")}
+        return ids
+
+    def snapshot_trees(self) -> Optional[Dict[str, Any]]:
+        """In-memory backend only: the committed cid→tree map, for
+        embedding into a session snapshot (a directory backend returns
+        None — its blobs are already durable on disk)."""
+        return None if self.directory else dict(self._mem)
+
+    def load_trees(self, trees: Dict[str, Any]) -> None:
+        """Seed the in-memory backend from a session snapshot."""
+        self._mem.update(trees)
+
     def _cache_read(self, cid: str, tree: Any) -> None:
         if self.read_cache_entries <= 0:
             return

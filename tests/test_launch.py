@@ -17,7 +17,7 @@ import pytest
 # initializing here guarantees these smoke tests always see the real mesh.
 assert jax.devices()
 
-from repro.launch import dryrun, train  # noqa: E402
+from repro.launch import dryrun, serve_studies, train  # noqa: E402
 
 
 def _run_main(monkeypatch, module, argv):
@@ -66,6 +66,22 @@ def test_launch_dryrun_reduced_skips_encoder_decode(monkeypatch, capsys):
                "--shape", "decode_32k"])
     out = capsys.readouterr().out
     assert "1 skipped (by design), 0 errors" in out
+
+
+def test_launch_serve_studies_snapshot_resume(monkeypatch, capsys, tmp_path):
+    """The service launcher's kill-and-restore path prints the same served
+    totals an uninterrupted session would (simulator backend)."""
+    base = ["serve_studies", "--studies", "2", "--workers", "4",
+            "--steps", "60", "--arrival-gap", "600", "--sec-per-step", "10"]
+    _run_main(monkeypatch, serve_studies, base)
+    uninterrupted = capsys.readouterr().out
+    _run_main(monkeypatch, serve_studies,
+              base + ["--snapshot-at", "700",
+                      "--session", str(tmp_path / "s.pkl")])
+    resumed = capsys.readouterr().out
+    assert "snapshot at t=" in resumed
+    served = [l for l in uninterrupted.splitlines() if l.startswith("served")]
+    assert served and served[0] in resumed
 
 
 def test_dryrun_reduced_rejects_multipod(monkeypatch):

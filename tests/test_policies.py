@@ -84,6 +84,29 @@ def test_fair_share_prefers_least_served_study():
     assert sched.usage["A"] > sched.usage["B"] > 0
 
 
+def test_fair_share_splits_shared_chain_cost():
+    """ROADMAP split-charging: a chain shared by k studies charges each of
+    them 1/k of its estimated cost — and refunds undo exactly the split."""
+    plan = SearchPlan()
+    # identical trial submitted by two studies: fully shared nodes
+    plan.submit(mk(Constant(0.1), 100), study="A")
+    plan.submit(mk(Constant(0.1), 100), study="B")
+    # a trial only study B runs
+    plan.submit(mk(Constant(0.3), 50), study="B")
+    tree = build_stage_tree(plan)
+    sched = FairShareScheduler()
+    paths = sched.assign(plan, tree, 4)
+    assert sum(len(p) for p in paths) == len(tree.stages)
+    # shared 100-step chain: 50 s to each study; B additionally pays its
+    # exclusive 50-step chain in full
+    assert sched.usage["A"] == pytest.approx(50.0)
+    assert sched.usage["B"] == pytest.approx(100.0)
+    for p in paths:
+        sched.on_stages_unassigned(plan, p)
+    assert sched.usage["A"] == pytest.approx(0.0)
+    assert sched.usage["B"] == pytest.approx(0.0)
+
+
 def test_fair_share_engine_run_completes():
     db = SearchPlanDB()
     studies = []

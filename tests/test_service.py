@@ -1,0 +1,311 @@
+"""Study service layer: long-lived sessions, dynamic admission, durable
+resume (ISSUE 5 — the §6.2 multi-study scenario under continuous traffic).
+"""
+
+import pytest
+
+from repro.core import (Constant, Exponential, MultiStep, SearchPlanDB,
+                        StepLR, Study, StudyService, StudySpec, Warmup,
+                        run_studies)
+from repro.core.hpseq import HpConfig
+from repro.core.trainer import SimulatedTrainer
+from repro.core.trial import Trial
+from repro.core.tuners import GridSearchSpace, GridTuner
+from repro.train.checkpoint import CheckpointStore
+
+SPEC = StudySpec("m", "d", ("lr", "bs"))
+
+
+def det(stats):
+    """Deterministic view of EngineStats: ckpt_{save,load}_seconds are real
+    wall-clock timers (perf_counter) and vary run to run even on the
+    simulator — everything else, by_study included, must replay exactly."""
+    import dataclasses
+    return dataclasses.replace(stats, ckpt_save_seconds=0.0,
+                               ckpt_load_seconds=0.0)
+
+
+def space():
+    return GridSearchSpace(
+        fns={"lr": [Constant(0.1), StepLR(0.1, 0.1, [100, 150]),
+                    Warmup(5, 0.1, StepLR(0.1, 0.1, [90, 135])),
+                    Warmup(5, 0.1, Exponential(0.1, 0.95))],
+             "bs": [Constant(128), MultiStep(128, [70], values=[128, 256])]})
+
+
+def mk(lr, steps):
+    return Trial(HpConfig({"lr": lr}), steps)
+
+
+# ---------------------------------------------------------------------------
+# session basics
+# ---------------------------------------------------------------------------
+
+
+def test_upfront_service_equals_run_studies():
+    """Submitting everything at t=0 through the session is event-for-event
+    the legacy batch path: identical stats."""
+    def batch():
+        db = SearchPlanDB()
+        pairs = [(Study.from_spec(db, SPEC), GridTuner(space().trials(150)))
+                 for _ in range(2)]
+        return run_studies(pairs, SimulatedTrainer(), n_workers=4)
+
+    def service():
+        db = SearchPlanDB()
+        svc = StudyService(db, SimulatedTrainer(), n_workers=4)
+        for _ in range(2):
+            svc.submit(SPEC, GridTuner(space().trials(150)))
+        return svc.close()
+
+    assert det(batch()) == det(service())
+
+
+def test_future_lifecycle_and_result():
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=4)
+    fut = svc.submit(SPEC, GridTuner(space().trials(100)))
+    assert fut.status == "queued" and not fut.done()
+    st = fut.result()
+    assert fut.done() and fut.tuner.is_done()
+    assert st.gpu_seconds > 0 and st.steps_run > 0 and st.trials == 8
+    assert svc.stats.by_study["study-0"] is st
+    svc.close()
+
+
+def test_session_survives_quiescence_and_reuses_forest():
+    """Quiescence is not termination: a drained session admits late studies
+    and serves them from the accumulated forest."""
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=4)
+    svc.submit(SPEC, GridTuner(space().trials(150)))
+    svc.join()
+    assert svc.quiescent
+    steps_before = svc.stats.steps_run
+
+    fut2 = svc.submit(SPEC, GridTuner(space().trials(150)))  # identical space
+    stats = svc.close()
+    assert fut2.done()
+    # every request answered straight from plan metrics — zero new training
+    assert stats.steps_run == steps_before
+    assert stats.study("study-1").instant_results == 8
+    assert stats.study("study-1").steps_run == 0
+
+
+def test_submit_after_close_and_key_mismatch_raise():
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=2)
+    svc.submit(SPEC, GridTuner(space().trials(60)))
+    with pytest.raises(ValueError, match="one StudyService drives one"):
+        svc.submit(StudySpec("other", "d", ("lr", "bs")),
+                   GridTuner(space().trials(60)))
+    with pytest.raises(ValueError, match="already submitted"):
+        svc.submit(SPEC, GridTuner(space().trials(60)), study_id="study-0")
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(SPEC, GridTuner(space().trials(60)))
+
+
+def test_run_studies_key_mismatch_raises_valueerror():
+    # satellite: a bare assert would vanish under `python -O`
+    db = SearchPlanDB()
+    s1 = Study.create(db, "m1", "d", ("lr",))
+    s2 = Study.create(db, "m2", "d", ("lr",))
+    with pytest.raises(ValueError, match="common study key"):
+        run_studies([(s1, GridTuner([])), (s2, GridTuner([]))],
+                    SimulatedTrainer())
+
+
+# ---------------------------------------------------------------------------
+# dynamic admission
+# ---------------------------------------------------------------------------
+
+
+def staggered_run(share, n_studies=3, offset=40.0, steps=160):
+    # 2 workers: dispatch keeps happening past the arrival times, so late
+    # studies genuinely merge into (and get credited on) in-flight work
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(horizon=steps), n_workers=2,
+                       share=share)
+    futs = [svc.submit(SPEC, GridTuner(space().trials(steps)), at=i * offset)
+            for i in range(n_studies)]
+    return svc.close(), futs
+
+
+def test_staggered_admission_merges_with_inflight_forest():
+    """A study arriving mid-drain merges into the live forest: physical
+    work well below the salted (trial-based) baseline."""
+    shared, futs = staggered_run(share=True)
+    salted, _ = staggered_run(share=False)
+    assert all(f.done() for f in futs)
+    assert shared.steps_run < salted.steps_run
+    assert shared.gpu_seconds < salted.gpu_seconds
+    # split-credited execution seconds can never exceed the engine total
+    # (resume-load overhead is engine-level only)
+    assert sum(s.gpu_seconds for s in shared.by_study.values()) \
+        <= shared.gpu_seconds + 1e-6
+    # on-behalf-of step counts exceed physical steps exactly when shared
+    assert sum(s.steps_run for s in shared.by_study.values()) \
+        > shared.steps_run
+
+
+def test_arrival_before_fork_point_equals_upfront():
+    """An arrival that lands before the shared prefix completes costs
+    exactly what upfront submission would have: same physical steps, same
+    GPU-seconds (the prefix is trained once either way)."""
+    a = mk(MultiStep(0.1, [100], values=[0.1, 0.05]), 200)
+    b = mk(MultiStep(0.1, [100], values=[0.1, 0.01]), 400)
+
+    def run(stagger):
+        db = SearchPlanDB()
+        svc = StudyService(db, SimulatedTrainer(), n_workers=1)
+        svc.submit(SPEC, GridTuner([a]))
+        svc.submit(SPEC, GridTuner([b]), at=1.0 if stagger else None)
+        return svc.close()
+
+    upfront, late = run(False), run(True)
+    assert late.steps_run == upfront.steps_run == 500   # 100 + 100 + 300
+    assert late.gpu_seconds == pytest.approx(upfront.gpu_seconds)
+    assert late.ckpt_loads == upfront.ckpt_loads
+
+
+# ---------------------------------------------------------------------------
+# cancel / detach
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_run_releases_nodes_into_gc():
+    db = SearchPlanDB()
+    store = CheckpointStore()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=2, store=store)
+    fut_a = svc.submit(SPEC, GridTuner([mk(Constant(0.1), 200),
+                                        mk(Constant(0.2), 200)]))
+    fut_b = svc.submit(SPEC, GridTuner([mk(Constant(0.05), 400),
+                                        mk(Constant(0.02), 400)]))
+    svc.run_until(150.0)
+    assert not svc.quiescent
+    assert fut_b.cancel()
+    assert fut_b.cancelled()
+    assert fut_b.cancel()          # idempotent once cancelled
+    stats = svc.close()
+
+    assert fut_a.done()
+    assert fut_b.status == "cancelled"
+    with pytest.raises(RuntimeError, match="cancelled"):
+        fut_b.result()
+    # B's exclusive nodes were released into checkpoint GC
+    assert stats.ckpt_evictions > 0
+    plan = db.get(SPEC.key)
+    assert plan.pending_requests() == []
+    for t in fut_b.tuner.trials:
+        assert t.trial_id not in plan.trial_paths
+    # A's checkpoints survive in the store; B's are gone
+    live_cids = {cid for nid, n in plan.nodes.items() if n.refcount > 0
+                 for cid in n.ckpts.values()}
+    assert all(store.contains(c) for c in live_cids)
+
+
+def test_cancel_spares_nodes_shared_with_live_study():
+    db = SearchPlanDB()
+    store = CheckpointStore()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=1, store=store)
+    shared_cfg = MultiStep(0.1, [100], values=[0.1, 0.05])
+    fut_a = svc.submit(SPEC, GridTuner([mk(shared_cfg, 200)]))
+    # B shares the [0, 100) prefix node with A, then diverges
+    fut_b = svc.submit(SPEC, GridTuner(
+        [mk(MultiStep(0.1, [100], values=[0.1, 0.01]), 400)]))
+    svc.run_until(150.0)
+    fut_b.cancel()
+    svc.close()
+    assert fut_a.done()
+    plan = db.get(SPEC.key)
+    # the shared prefix node is still referenced by A and keeps its ckpt
+    prefix = [n for n in plan.nodes.values() if n.start == 0][0]
+    assert prefix.refcount > 0
+    assert all(store.contains(c) for c in prefix.ckpts.values())
+
+
+# ---------------------------------------------------------------------------
+# durable resume
+# ---------------------------------------------------------------------------
+
+
+def build_session(db):
+    svc = StudyService(db, SimulatedTrainer(), n_workers=4)
+    svc.submit(SPEC, GridTuner(space().trials(200)))
+    svc.submit(SPEC, GridTuner(space().trials(160)), at=80.0)
+    return svc
+
+
+def test_snapshot_restore_resumes_identically(tmp_path):
+    """The acceptance check: a half-finished session restored from a
+    snapshot finishes with EngineStats (per-study gpu_seconds, steps_run
+    included) identical to the uninterrupted run."""
+    db = SearchPlanDB()
+    svc = build_session(db)
+    svc.run_until(150.0)          # half-finished; study-1 admitted at t=80
+    assert not svc.quiescent
+    path = str(tmp_path / "session.pkl")
+    svc.snapshot(path)
+    reference = svc.close()       # the uninterrupted run
+
+    db2 = SearchPlanDB()
+    svc2 = StudyService.restore(db2, path, SimulatedTrainer())
+    assert not svc2.quiescent
+    assert [f.study_id for f in svc2.futures] == ["study-0", "study-1"]
+    resumed = svc2.close()
+
+    assert det(resumed) == det(reference)  # full equality, by_study included
+    assert resumed.by_study["study-0"] == reference.by_study["study-0"]
+    assert resumed.by_study["study-1"] == reference.by_study["study-1"]
+    assert all(f.done() for f in svc2.futures)
+
+
+def test_snapshot_restore_with_directory_store(tmp_path):
+    """Directory-backed stores persist blobs themselves: the snapshot only
+    records the committed index, and restore serves resumes from disk."""
+    db = SearchPlanDB()
+    store = CheckpointStore(str(tmp_path / "ckpts"))
+    svc = StudyService(db, SimulatedTrainer(), n_workers=4, store=store)
+    svc.submit(SPEC, GridTuner(space().trials(200)))
+    svc.run_until(120.0)
+    path = str(tmp_path / "session.pkl")
+    svc.snapshot(path)
+    reference = svc.close()
+
+    store2 = CheckpointStore(str(tmp_path / "ckpts"))
+    svc2 = StudyService.restore(SearchPlanDB(), path, SimulatedTrainer(),
+                                store=store2)
+    resumed = svc2.close()
+    assert det(resumed) == det(reference)
+    assert resumed.ckpt_misses == reference.ckpt_misses
+
+
+def test_restore_with_emptied_store_degrades_to_recompute(tmp_path):
+    """A store that lost blobs since the snapshot costs recomputation, not
+    a crash: stale plan entries are forgotten eagerly at restore."""
+    db = SearchPlanDB()
+    svc = build_session(db)
+    svc.run_until(150.0)
+    path = str(tmp_path / "session.pkl")
+    svc.snapshot(path)
+    reference = svc.close()
+
+    state_breaking_store = CheckpointStore()   # fresh and EMPTY memory store
+    import repro.core.engine.session as sess
+    state = sess.load_session(path)
+    state.store_mem = None                     # simulate losing every blob
+    state.store_cids = set()
+    sess.save_session(state, path)
+    svc2 = StudyService.restore(SearchPlanDB(), path, SimulatedTrainer(),
+                                store=state_breaking_store)
+    resumed = svc2.close()
+    assert all(f.done() for f in svc2.futures)
+    # completes correctly, but pays recompute for the lost checkpoints
+    assert resumed.steps_run >= reference.steps_run
+
+
+def test_snapshot_requires_submission():
+    svc = StudyService(SearchPlanDB(), SimulatedTrainer())
+    with pytest.raises(RuntimeError, match="nothing submitted"):
+        svc.snapshot("nowhere.pkl")
