@@ -1,0 +1,84 @@
+"""CI gate for the kernel plane (mirrors check_dataplane_trend).
+
+Compares the current ``BENCH_kernels.json`` against the committed
+baseline (``benchmarks/baseline_kernels.json``) and fails when:
+
+* any baseline (kernel, shape) row is missing — coverage can only grow;
+* any row reports ``fallbacks != 0`` — the kernel plane must actually
+  run on the CI backend (CPU interpret mode), not detour to the oracle;
+* ``max_abs_err`` exceeds ``max(ERR_SLACK x baseline, ERR_FLOOR)`` — the
+  kernels must stay numerically glued to the jnp reference;
+* ``pct_of_peak`` is missing or non-positive — the roofline column is
+  part of the report contract (on TPU it is the headline number; on CPU
+  interpret it is tiny but must exist and be > 0);
+* the pallas/ref wall-time ratio blows up more than ``TIME_SLACK`` x over
+  the baseline ratio.  Absolute interpret-mode times are meaningless
+  across machines, but the *ratio* against the jnp reference on the same
+  machine is stable; this catches a catastrophic interpret-path
+  regression (e.g. an accidental per-element fori_loop) without flaking
+  on CI load.
+
+Usage: ``python benchmarks/check_kernels_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+ERR_SLACK = 10.0     # current err may be up to 10x the baseline err
+ERR_FLOOR = 1e-5     # ...but never gated below this absolute floor
+TIME_SLACK = 10.0    # pallas/ref ratio may grow up to 10x vs baseline
+
+
+def _row(rows, kernel: str, shape: str) -> dict:
+    for r in rows:
+        if r["kernel"] == kernel and r["shape"] == shape:
+            return r
+    raise SystemExit(f"benchmark row ({kernel}, {shape}) missing")
+
+
+def main(current_path: str = "BENCH_kernels.json",
+         baseline_path: str = "benchmarks/baseline_kernels.json") -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    for b in base:
+        r = _row(cur, b["kernel"], b["shape"])
+        tag = f"{b['kernel']}[{b['shape']}]"
+
+        fb = r.get("fallbacks")
+        if fb != 0:
+            raise SystemExit(f"{tag}: {fb} kernel fallbacks (must be 0 — "
+                             "the kernel plane did not run)")
+
+        ceil = max(ERR_SLACK * b["max_abs_err"], ERR_FLOOR)
+        if not (r["max_abs_err"] <= ceil):
+            raise SystemExit(
+                f"{tag}: max_abs_err {r['max_abs_err']:.3e} exceeds ceiling "
+                f"{ceil:.3e} (baseline {b['max_abs_err']:.3e})")
+
+        pct = r.get("pct_of_peak")
+        if pct is None or not (pct > 0):
+            raise SystemExit(f"{tag}: pct_of_peak missing or non-positive "
+                             f"({pct!r})")
+
+        cur_ratio = r["pallas_ms"] / max(r["ref_ms"], 1e-3)
+        base_ratio = b["pallas_ms"] / max(b["ref_ms"], 1e-3)
+        if cur_ratio > base_ratio * TIME_SLACK:
+            raise SystemExit(
+                f"{tag}: pallas/ref wall-time ratio {cur_ratio:.1f} is "
+                f">{TIME_SLACK:.0f}x the baseline ratio {base_ratio:.1f}")
+
+        print(f"{tag}: err {r['max_abs_err']:.2e} (ceil {ceil:.2e}), "
+              f"fallbacks 0, pct_of_peak {pct}, ratio {cur_ratio:.1f} "
+              f"(base {base_ratio:.1f})")
+
+    print("kernel trend OK")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    main(*(argv[:2]))

@@ -91,6 +91,15 @@ class Dispatcher:
         # least one stale checkpoint entry, so the loop terminates.
         while self._assign_round():
             pass
+        self._sync_kernel_stats()
+
+    def _sync_kernel_stats(self) -> None:
+        """Mirror the backend's kernel-plane counters (trace-time call/
+        fallback counts, cumulative per backend) into ``EngineStats``."""
+        calls = getattr(self.backend, "kernel_calls", None)
+        if calls is not None:
+            self.stats.kernel_calls = calls
+            self.stats.kernel_fallbacks = self.backend.kernel_fallbacks
 
     def _assign_round(self) -> bool:
         """One scheduling round; True when a checkpoint miss warrants a

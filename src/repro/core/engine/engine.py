@@ -156,6 +156,9 @@ class EngineStats:
     ckpt_misses: int = 0      # vanished resume ckpts degraded to recompute
     chain_fused_stages: int = 0   # stages advanced via backend.run_chain(s)
     ckpt_async_writes: int = 0    # write-behind boundary checkpoints
+    kernel_calls: int = 0         # kernel-plane call sites traced (backend-
+                                  # cumulative; see JaxTrainer.kernel_calls)
+    kernel_fallbacks: int = 0     # kernel→oracle fallbacks traced
     ckpt_save_seconds: float = 0.0  # synchronous slice of store puts
     ckpt_load_seconds: float = 0.0  # store gets (resume loads)
     by_study: Dict[str, StudyStats] = field(default_factory=dict)

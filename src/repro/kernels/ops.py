@@ -1,42 +1,177 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers for the Pallas kernels — the kernel plane's API.
 
 ``flash_attention`` / ``ssd_intra`` are what the model layer calls when
-``use_kernel=True``.  On CPU (this container) they run the kernel bodies in
+``use_kernel=True``.  On CPU (this container) the kernel bodies run in
 ``interpret=True`` mode for correctness validation; on TPU the same calls
-compile to Mosaic.  Both fall back to the jnp oracle under ``vmap``/AD
-transforms where the kernel is forward-only.
+compile to Mosaic.  Three properties make them safe inside the engine's
+hot paths:
+
+* **Differentiable through Pallas**: the ``custom_vjp`` backward is the
+  FA2 recompute-tile kernel pair (``flash_attention_bwd``) and the SSD
+  backward kernel (``ssd_intra_bwd_pallas``) — ``jax.grad`` inside a
+  chunk executable stays on the kernel plane instead of detouring
+  through the XLA reference.
+* **Trial-stacked batching**: every kernel entry point carries a
+  ``jax.custom_batching.custom_vmap`` rule that folds the vmapped member
+  axis into the kernel's batch grid axis (``(M, B, …) → (M·B, …)``), so
+  ``jax.vmap`` over sibling-group members launches ONE kernel over a
+  larger grid rather than silently dropping to the oracle.  Unbatched
+  operands are broadcast along the member axis first.  The rules live on
+  the *raw* kernel launchers (called from inside the custom_vjp fwd/bwd,
+  where no further AD happens), sidestepping ``custom_vmap``'s autodiff
+  limitations.
+* **Counted fallbacks**: a call that cannot use the kernel (non-TPU
+  accelerator backend — Pallas TPU kernels don't lower on GPU) drops to
+  the jnp oracle, increments ``KERNEL_STATS.fallbacks`` with a reason,
+  and warns once per (kernel, reason) — no more silent oracle detours.
+  ``KERNEL_STATS.calls`` counts kernel-plane *call sites traced* (a
+  compiled executable does not re-run Python, so counters move at trace
+  time — constant per distinct compilation, not per step).  Surfaced via
+  ``JaxTrainer.kernel_calls`` / ``EngineStats.kernel_fallbacks`` and the
+  ``bench_kernels`` fallback column.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
-from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
 from repro.kernels.ref import attention_ref, ssd_intra_ref
-from repro.kernels.ssd_scan import ssd_intra_pallas
+from repro.kernels.ssd_scan import ssd_intra_bwd_pallas, ssd_intra_pallas
 
-__all__ = ["flash_attention", "ssd_intra"]
+__all__ = ["flash_attention", "ssd_intra", "KernelFallbackWarning",
+           "KERNEL_STATS", "reset_kernel_stats", "note_call",
+           "note_fallback", "unsupported_reason"]
+
+
+class KernelFallbackWarning(UserWarning):
+    """A kernel-plane call dropped to the jnp oracle."""
+
+
+@dataclass
+class KernelStats:
+    """Module-global kernel-plane accounting (trace-time counters)."""
+    calls: int = 0
+    fallbacks: int = 0
+    reasons: Counter = field(default_factory=Counter)
+
+    def snapshot(self) -> Tuple[int, int]:
+        return (self.calls, self.fallbacks)
+
+
+KERNEL_STATS = KernelStats()
+_WARNED: set = set()
+
+
+def reset_kernel_stats() -> None:
+    KERNEL_STATS.calls = 0
+    KERNEL_STATS.fallbacks = 0
+    KERNEL_STATS.reasons.clear()
+    _WARNED.clear()
+
+
+def note_call(kernel: str) -> None:
+    KERNEL_STATS.calls += 1
+
+
+def note_fallback(kernel: str, reason: str) -> None:
+    KERNEL_STATS.fallbacks += 1
+    KERNEL_STATS.reasons[f"{kernel}:{reason}"] += 1
+    if (kernel, reason) not in _WARNED:
+        _WARNED.add((kernel, reason))
+        warnings.warn(
+            f"pallas kernel {kernel!r} fell back to the jnp oracle "
+            f"({reason}); the kernel plane is inactive for these calls",
+            KernelFallbackWarning, stacklevel=3)
+
+
+def unsupported_reason() -> str:
+    """Why the current backend cannot run the TPU kernels (None-able str:
+    empty == supported).  CPU runs them in interpret mode; GPU has no
+    Mosaic lowering, so the oracle is the honest path there."""
+    backend = jax.default_backend()
+    if backend in ("cpu", "tpu"):
+        return ""
+    return f"backend:{backend}"
+
+
+def _fold(axis_size: int, batched, *args):
+    """Broadcast unbatched operands along the member axis, then fold the
+    member axis into each operand's leading batch axis."""
+    out = []
+    for a, b in zip(args, batched):
+        if not b:
+            a = jnp.broadcast_to(a, (axis_size,) + a.shape)
+        out.append(a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]))
+    return out
+
+
+def _unfold(m: int, x):
+    return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+
+# ------------------------------------------------------- flash attention
+@functools.lru_cache(maxsize=None)
+def _fa_fwd_op(causal: bool, window: int):
+    """Raw forward launcher (returns out + lse) with a member-folding
+    batching rule; statics are closed over (one op per (causal, window))."""
+    @custom_vmap
+    def fwd(q, k, v):
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   return_lse=True)
+
+    @fwd.def_vmap
+    def _rule(axis_size, in_batched, q, k, v):
+        q, k, v = _fold(axis_size, in_batched, q, k, v)
+        out, lse = flash_attention_fwd(q, k, v, causal=causal,
+                                       window=window, return_lse=True)
+        return (_unfold(axis_size, out), _unfold(axis_size, lse)), \
+            (True, True)
+
+    return fwd
+
+
+@functools.lru_cache(maxsize=None)
+def _fa_bwd_op(causal: bool, window: int):
+    @custom_vmap
+    def bwd(q, k, v, out, lse, do):
+        return flash_attention_bwd(q, k, v, out, lse, do, causal=causal,
+                                   window=window)
+
+    @bwd.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        args = _fold(axis_size, in_batched, *args)
+        dq, dk, dv = flash_attention_bwd(*args[:6], causal=causal,
+                                         window=window)
+        return tuple(_unfold(axis_size, x) for x in (dq, dk, dv)), \
+            (True, True, True)
+
+    return bwd
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _fa(q, k, v, causal, window):
-    return flash_attention_fwd(q, k, v, causal=causal, window=window)
+    out, _ = _fa_fwd_op(causal, window)(q, k, v)
+    return out
 
 
 def _fa_fwd(q, k, v, causal, window):
-    return _fa(q, k, v, causal, window), (q, k, v)
+    out, lse = _fa_fwd_op(causal, window)(q, k, v)
+    return out, (q, k, v, out, lse)
 
 
 def _fa_bwd(causal, window, res, g):
-    # backward through the reference (XLA) attention — the paper's workloads
-    # serve/evaluate through the kernel; training backprop stays in XLA.
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(
-        q_, k_, v_, causal=causal, window=window), q, k, v)
-    return vjp(g)
+    q, k, v, out, lse = res
+    return _fa_bwd_op(causal, window)(q, k, v, out, lse, g)
 
 
 _fa.defvjp(_fa_fwd, _fa_bwd)
@@ -44,13 +179,43 @@ _fa.defvjp(_fa_fwd, _fa_bwd)
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0) -> jnp.ndarray:
-    """(B,S,Hq,hd) GQA flash attention; differentiable (XLA backward)."""
+    """(B,S,Hq,hd) GQA flash attention; differentiable (Pallas backward)
+    and vmap-aware (member axis folds into the kernel grid)."""
+    reason = unsupported_reason()
+    if reason:
+        note_fallback("flash_attention", reason)
+        return attention_ref(q, k, v, causal=causal, window=window)
+    note_call("flash_attention")
     return _fa(q, k, v, causal, window)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def _ssd(xr, dtr, ltT, Br, Cr):
+# ------------------------------------------------------------- ssd intra
+@custom_vmap
+def _ssd_fwd_op(xr, dtr, ltT, Br, Cr):
     return ssd_intra_pallas(xr, dtr, ltT, Br, Cr)
+
+
+@_ssd_fwd_op.def_vmap
+def _ssd_fwd_rule(axis_size, in_batched, *args):
+    args = _fold(axis_size, in_batched, *args)
+    return _unfold(axis_size, ssd_intra_pallas(*args)), True
+
+
+@custom_vmap
+def _ssd_bwd_op(xr, dtr, ltT, Br, Cr, g):
+    return ssd_intra_bwd_pallas(xr, dtr, ltT, Br, Cr, g)
+
+
+@_ssd_bwd_op.def_vmap
+def _ssd_bwd_rule(axis_size, in_batched, *args):
+    args = _fold(axis_size, in_batched, *args)
+    grads = ssd_intra_bwd_pallas(*args)
+    return tuple(_unfold(axis_size, x) for x in grads), (True,) * 5
+
+
+@jax.custom_vjp
+def _ssd(xr, dtr, ltT, Br, Cr):
+    return _ssd_fwd_op(xr, dtr, ltT, Br, Cr)
 
 
 def _ssd_fwd(xr, dtr, ltT, Br, Cr):
@@ -58,14 +223,18 @@ def _ssd_fwd(xr, dtr, ltT, Br, Cr):
 
 
 def _ssd_bwd(res, g):
-    xr, dtr, ltT, Br, Cr = res
-    _, vjp = jax.vjp(ssd_intra_ref, xr, dtr, ltT, Br, Cr)
-    return vjp(g)
+    return _ssd_bwd_op(*res, g)
 
 
 _ssd.defvjp(_ssd_fwd, _ssd_bwd)
 
 
 def ssd_intra(xr, dtr, ltT, Br, Cr):
-    """Intra-chunk SSD term via the Pallas kernel (XLA backward)."""
+    """Intra-chunk SSD term via the Pallas kernel (Pallas backward,
+    member-folding vmap rule)."""
+    reason = unsupported_reason()
+    if reason:
+        note_fallback("ssd_intra", reason)
+        return ssd_intra_ref(xr, dtr, ltT, Br, Cr)
+    note_call("ssd_intra")
     return _ssd(xr, dtr, ltT, Br, Cr)

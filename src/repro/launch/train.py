@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.data import DataPipeline, synthetic_lm_dataset
+from repro.kernels.ops import KERNEL_STATS
 from repro.dist.sharding import (ShardingRules, batch_specs, mesh_sizes_of,
                                  param_specs)
 from repro.launch.specs import batch_struct
@@ -90,6 +91,9 @@ def main():
                   f"({(time.time()-t0)/(i+1):.2f}s/step)")
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
           f"final loss {float(loss):.4f}")
+    if args.use_kernel:
+        print(f"kernel plane: {KERNEL_STATS.calls} call sites, "
+              f"{KERNEL_STATS.fallbacks} fallbacks")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,22 @@ seed per-step loop (kept as :meth:`run_stage_stepwise`) — all asserted by
 
 Batch-size sequences change the batch *shape* → new executable cache entry;
 revisiting a size is free.
+
+Kernel plane: ``use_kernel`` routes the hot math through the Pallas
+kernels — the task's attention/SSD forward+backward
+(:mod:`repro.kernels.ops`, set via the task's ``use_kernel`` attribute
+when it has one) and the fused trial-stacked optimizer update
+(:func:`repro.kernels.optim.fused_apply_update`) in every chunk body.
+The default follows the backend gate: on for TPU (Mosaic codegen), off
+otherwise; pass ``use_kernel=True`` explicitly to exercise the kernels
+in interpret mode on CPU (correct but interpreter-slow — tests only).
+All four execution paths (``run_stage``, ``run_stages_batched``,
+``run_chain``, ``run_chains_batched``) share the same chunk bodies, so
+they are uniformly kernel-aware; on the vmapped sibling-group path the
+kernels' batching rules fold the member axis into the kernel grid (one
+launch per group).  ``kernel_calls`` / ``kernel_fallbacks`` expose the
+kernel plane's trace-time counters (cumulative since this trainer's
+construction) for ``EngineStats``.
 """
 
 from __future__ import annotations
@@ -76,6 +92,8 @@ import numpy as np
 from repro.core.trainer import StageContext, TrainerBackend
 from repro.core.values import desc_static, desc_values
 from repro.data.pipeline import DataPipeline
+from repro.kernels import ops as kernel_ops
+from repro.kernels.optim import fused_apply_update
 from repro.train.checkpoint import stack_pytrees, unstack_pytree
 from repro.train.optimizer import apply_update, init_opt_state
 
@@ -107,7 +125,8 @@ class JaxTrainer(TrainerBackend):
                  chunk_steps: int = 8,
                  vectorize_groups: Optional[bool] = None,
                  backend: Optional[str] = None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
         self.task = task
         self.pipeline_factory = pipeline_factory
         self.eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
@@ -125,6 +144,13 @@ class JaxTrainer(TrainerBackend):
         self.use_scan = accel                   # lax.scan chunk bodies
         self.vectorize_groups = accel if vectorize_groups is None \
             else vectorize_groups
+        # kernel plane (see module docstring): TPU-on by default, explicit
+        # True runs interpret-mode kernels on CPU (tests), False = oracle
+        self.use_kernel = (self.backend == "tpu") if use_kernel is None \
+            else bool(use_kernel)
+        if self.use_kernel and hasattr(task, "use_kernel"):
+            task.use_kernel = True
+        self._kernel_stats0 = kernel_ops.KERNEL_STATS.snapshot()
         self._step_fns: Dict[Tuple, Any] = {}   # stepwise per-step executables
         self._chunk_fns: Dict[Tuple, Any] = {}  # fused / batched executables
         # buffer donation frees the carry between chunks; XLA:CPU does not
@@ -137,6 +163,18 @@ class JaxTrainer(TrainerBackend):
         # virtual clock (a deployment amortizes compiles across the study).
         self.compile_seconds = 0.0
         self.exec_calls = 0       # compiled-executable dispatches issued
+
+    # ------------------------------------------------- kernel-plane counters
+    @property
+    def kernel_calls(self) -> int:
+        """Kernel-plane call sites traced since construction (counters move
+        at trace time: constant per compilation, not per step)."""
+        return kernel_ops.KERNEL_STATS.calls - self._kernel_stats0[0]
+
+    @property
+    def kernel_fallbacks(self) -> int:
+        """Kernel→oracle fallbacks traced since construction."""
+        return kernel_ops.KERNEL_STATS.fallbacks - self._kernel_stats0[1]
 
     @property
     def supports_batched_stages(self) -> bool:  # type: ignore[override]
@@ -198,6 +236,7 @@ class JaxTrainer(TrainerBackend):
         per-step loop), a real ``lax.scan`` on accelerator backends — see
         the module docstring for the gate's rationale."""
         task = self.task
+        update = fused_apply_update if self.use_kernel else apply_update
 
         if self.use_scan:
             def chunk(carry, static_hp, hp_xs, slab, steps):
@@ -208,8 +247,8 @@ class JaxTrainer(TrainerBackend):
                     hp.update(hp_i)
                     (loss, _), grads = jax.value_and_grad(
                         task.loss, has_aux=True)(params, batch)
-                    params, opt = apply_update(opt_name, params, grads, opt,
-                                               hp, step)
+                    params, opt = update(opt_name, params, grads, opt,
+                                         hp, step)
                     return (params, opt), loss
 
                 carry, losses = jax.lax.scan(body, carry,
@@ -228,8 +267,8 @@ class JaxTrainer(TrainerBackend):
                 batch = {k: v[i] for k, v in slab.items()}
                 (loss, _), grads = jax.value_and_grad(
                     task.loss, has_aux=True)(params, batch)
-                params, opt = apply_update(opt_name, params, grads, opt,
-                                           hp, steps[i])
+                params, opt = update(opt_name, params, grads, opt,
+                                     hp, steps[i])
             return (params, opt), loss
 
         chunk.uses_scan = False
@@ -467,11 +506,13 @@ class JaxTrainer(TrainerBackend):
     def _jitted_step(self, opt_name: str):
         key = ("step", opt_name)
         if key not in self._step_fns:
+            update = fused_apply_update if self.use_kernel else apply_update
+
             def step_fn(params, opt, batch, hp, step):
                 (loss, _), grads = jax.value_and_grad(
                     self.task.loss, has_aux=True)(params, batch)
-                params, opt = apply_update(opt_name, params, grads, opt,
-                                           hp, step)
+                params, opt = update(opt_name, params, grads, opt,
+                                     hp, step)
                 return params, opt, loss
             self._step_fns[key] = jax.jit(step_fn)
         return self._step_fns[key]

@@ -1,13 +1,20 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, ssd_intra
+from repro.kernels import ops as kernel_ops
+from repro.kernels.flash_attention import fa_tile_counts, flash_attention_fwd
+from repro.kernels.optim import fused_apply_update
+from repro.kernels.ops import (KERNEL_STATS, KernelFallbackWarning,
+                               flash_attention, reset_kernel_stats, ssd_intra)
 from repro.kernels.ref import attention_ref, ssd_intra_ref
 from repro.models.ssm import ssd_chunked, ssd_sequential
+from repro.train.optimizer import apply_update, init_opt_state
 
 KEY = jax.random.PRNGKey(0)
 
@@ -96,3 +103,247 @@ def test_ssd_chunked_kernel_path_matches_jnp_path():
     y1, _ = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=False)
     y2, _ = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=True)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels: jax.grad through the custom_vjp stays on the kernel plane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Sq,Hq,Hkv,hd,causal,window", [
+    (1, 128, 4, 4, 64, True, 0),       # MHA causal
+    (2, 128, 8, 2, 64, True, 48),      # GQA 4:1 + sliding window
+    (1, 96, 4, 2, 64, False, 0),       # ragged, non-causal
+])
+def test_flash_attention_bwd_matches_ref(B, Sq, Hq, Hkv, hd, causal, window):
+    """dq/dk/dv from the FA2 recompute-tile backward kernels == oracle."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd))
+    k = jax.random.normal(ks[1], (B, Sq, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, Sq, Hkv, hd))
+
+    def loss(fn):
+        return lambda q_, k_, v_: fn(
+            q_, k_, v_, causal=causal, window=window).sum()
+
+    gk = jax.grad(loss(flash_attention), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss(attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gk, gr, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3, err_msg=name)
+
+
+def test_ssd_intra_grads_match_ref():
+    """All five cotangents of the SSD backward kernel == oracle."""
+    B, nc, Q, H, P, N = 2, 3, 32, 4, 16, 24
+    ks = jax.random.split(KEY, 5)
+    xr = jax.random.normal(ks[0], (B, nc, Q, H, P))
+    dtr = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+    ltT = -jnp.abs(jax.random.normal(ks[2], (B, nc, H, Q))) * 0.1
+    Br = jax.random.normal(ks[3], (B, nc, Q, N))
+    Cr = jax.random.normal(ks[4], (B, nc, Q, N))
+
+    gk = jax.grad(lambda *a: ssd_intra(*a).sum(),
+                  argnums=(0, 1, 2, 3, 4))(xr, dtr, ltT, Br, Cr)
+    gr = jax.grad(lambda *a: ssd_intra_ref(*a).sum(),
+                  argnums=(0, 1, 2, 3, 4))(xr, dtr, ltT, Br, Cr)
+    for a, b, name in zip(gk, gr, ("dx", "ddt", "dlt", "dB", "dC")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=2e-3, err_msg=name)
+
+
+def test_flash_attention_grad_under_jit():
+    """The kernel-plane vjp composes with jit (the chunk executable path)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    gk = jax.jit(jax.grad(lambda *a: flash_attention(*a).sum(),
+                          argnums=(0, 1, 2)))(q, k, v)
+    gr = jax.grad(lambda *a: attention_ref(*a).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# pl.when tile skipping: masked KV tiles never execute
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,window,expect_skips", [
+    (True, 0, True),       # upper-triangular tiles skipped
+    (True, 64, True),      # window kills tiles below the band too
+    (False, 0, False),     # dense: every tile live
+])
+def test_flash_attention_tile_skipping(causal, window, expect_skips):
+    """The executed-tile counter matches the analytic predicate oracle
+    (fa_tile_counts) exactly, and the masked tiles really are skipped."""
+    B, S, Hq, Hkv, hd, blk = 2, 256, 4, 2, 32, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    out, tiles = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=blk, block_k=blk,
+        count_tiles=True)
+    executed, skipped = fa_tile_counts(S, S, blk, blk, causal, window)
+    assert int(tiles) == B * Hq * executed
+    assert (skipped > 0) == expect_skips
+    # skipping must not change the math
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# trial-stacked batching: vmap folds onto the kernel grid == stacked oracle
+# ---------------------------------------------------------------------------
+
+
+def test_vmapped_flash_attention_matches_stacked_oracle():
+    M, B, S, Hq, Hkv, hd = 3, 2, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (M, B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (M, B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (M, B, S, Hkv, hd))
+    out = jax.vmap(lambda *a: flash_attention(*a, causal=True))(q, k, v)
+    ref = jnp.stack([attention_ref(q[i], k[i], v[i], causal=True)
+                     for i in range(M)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_vmapped_flash_attention_grad_matches_stacked_oracle():
+    """vmap(grad(...)) — the batched-sibling training path — == per-member
+    oracle grads, including a broadcast (unbatched) kv operand."""
+    M, B, S, Hq, Hkv, hd = 3, 1, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (M, B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    g = jax.vmap(jax.grad(lambda q_, k_, v_: flash_attention(q_, k_, v_).sum(),
+                          argnums=(0, 1, 2)), in_axes=(0, None, None))(q, k, v)
+    for i in range(M):
+        gr = jax.grad(lambda q_, k_, v_: attention_ref(q_, k_, v_).sum(),
+                      argnums=(0, 1, 2))(q[i], k, v)
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b),
+                                       atol=2e-4, rtol=2e-3)
+
+
+def test_vmapped_ssd_intra_matches_stacked_oracle():
+    M, B, nc, Q, H, P, N = 3, 1, 2, 32, 2, 16, 16
+    ks = jax.random.split(KEY, 5)
+    xr = jax.random.normal(ks[0], (M, B, nc, Q, H, P))
+    dtr = jax.nn.softplus(jax.random.normal(ks[1], (M, B, nc, Q, H)))
+    ltT = -jnp.abs(jax.random.normal(ks[2], (M, B, nc, H, Q))) * 0.1
+    Br = jax.random.normal(ks[3], (M, B, nc, Q, N))
+    Cr = jax.random.normal(ks[4], (M, B, nc, Q, N))
+    out = jax.vmap(ssd_intra)(xr, dtr, ltT, Br, Cr)
+    ref = jnp.stack([ssd_intra_ref(xr[i], dtr[i], ltT[i], Br[i], Cr[i])
+                     for i in range(M)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused trial-stacked optimizer kernel == apply_update
+# ---------------------------------------------------------------------------
+
+OPT_HPS = {
+    "sgd": {"lr": 0.1, "wd": 1e-4},
+    "momentum": {"lr": 0.1, "wd": 1e-4, "momentum": 0.85},
+    "adam": {"lr": 1e-3, "wd": 1e-4, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+    "adamw": {"lr": 1e-3, "wd": 1e-2, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+}
+
+
+def _opt_problem(name, key, stack=None):
+    """Params/grads/state with awkward leaf shapes (exercise lane padding)."""
+    shapes = {"w": (37, 5), "b": (7,), "s": (1,)}
+    lead = () if stack is None else (stack,)
+    ks = jax.random.split(key, 2 * len(shapes))
+    params = {k: jax.random.normal(ks[i], lead + s)
+              for i, (k, s) in enumerate(shapes.items())}
+    grads = {k: jax.random.normal(ks[len(shapes) + i], lead + s) * 0.1
+             for i, (k, s) in enumerate(shapes.items())}
+    state = {sk: {k: jnp.ones(lead + s) * 0.01 for k, s in shapes.items()}
+             for sk in init_opt_state(name, {k: jnp.zeros(s) for k, s
+                                             in shapes.items()})}
+    return params, grads, state
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw"])
+def test_fused_optimizer_matches_apply_update(name):
+    params, grads, state = _opt_problem(name, KEY)
+    hp = {k: jnp.float32(v) for k, v in OPT_HPS[name].items()}
+    step = jnp.int32(3)       # non-trivial adam bias correction
+    new_p, new_s = fused_apply_update(name, params, grads, state, hp, step)
+    ref_p, ref_s = apply_update(name, params, grads, state, hp, step)
+    for a, b in zip(jax.tree.leaves((new_p, new_s)),
+                    jax.tree.leaves((ref_p, ref_s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw"])
+def test_vmapped_fused_optimizer_divergent_hps(name):
+    """vmap over members with per-member hp vectors — the batched-sibling
+    optimizer path — == apply_update run member by member."""
+    M = 3
+    params, grads, state = _opt_problem(name, KEY, stack=M)
+    hp = {k: jnp.float32(v) * (1.0 + 0.1 * jnp.arange(M))
+          for k, v in OPT_HPS[name].items()}
+    step = jnp.arange(M, dtype=jnp.int32)
+    new_p, new_s = jax.jit(jax.vmap(
+        lambda p, g, s, h, t: fused_apply_update(name, p, g, s, h, t)))(
+            params, grads, state, hp, step)
+    for i in range(M):
+        pi = jax.tree.map(lambda x: x[i], params)
+        gi = jax.tree.map(lambda x: x[i], grads)
+        si = jax.tree.map(lambda x: x[i], state)
+        hi = {k: v[i] for k, v in hp.items()}
+        ref_p, ref_s = apply_update(name, pi, gi, si, hi, step[i])
+        for a, b in zip(jax.tree.leaves((new_p, new_s)),
+                        jax.tree.leaves((ref_p, ref_s))):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b),
+                                       atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fallbacks: counted, reason-tagged, warned exactly once — never silent
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_counted_and_warned_once(monkeypatch):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    ref = attention_ref(q, k, v, causal=True)
+
+    reset_kernel_stats()
+    try:
+        monkeypatch.setattr(kernel_ops.jax, "default_backend", lambda: "gpu")
+        with pytest.warns(KernelFallbackWarning, match="flash_attention"):
+            out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+        # second call: counted again, but NOT warned again
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            flash_attention(q, k, v, causal=True)
+        assert KERNEL_STATS.fallbacks == 2
+        assert KERNEL_STATS.calls == 0
+        assert KERNEL_STATS.reasons["flash_attention:backend:gpu"] == 2
+
+        # the optimizer gate shares the accounting
+        params, grads, state = _opt_problem("sgd", KEY)
+        hp = {"lr": jnp.float32(0.1), "wd": jnp.float32(0.0)}
+        with pytest.warns(KernelFallbackWarning, match="opt_update"):
+            fused_apply_update("sgd", params, grads, state, hp, jnp.int32(0))
+        assert KERNEL_STATS.fallbacks == 3
+    finally:
+        reset_kernel_stats()

@@ -34,6 +34,20 @@ def test_launch_train_reduced(monkeypatch, capsys):
     assert "done: 3 steps" in out
 
 
+def test_launch_train_reduced_use_kernel(monkeypatch, capsys):
+    """--use-kernel trains through the Pallas kernel plane (interpret mode
+    on CPU) and reports its call/fallback accounting."""
+    from repro.kernels.ops import reset_kernel_stats
+    reset_kernel_stats()       # the printed accounting is module-global
+    _run_main(monkeypatch, train,
+              ["train", "--arch", "qwen2-0.5b", "--reduced", "--use-kernel",
+               "--steps", "2", "--batch", "2", "--seq", "16"])
+    out = capsys.readouterr().out
+    assert "done: 2 steps" in out
+    assert "kernel plane:" in out
+    assert "0 fallbacks" in out
+
+
 def test_launch_train_rejects_frontend_archs(monkeypatch):
     with pytest.raises(SystemExit):
         _run_main(monkeypatch, train,
