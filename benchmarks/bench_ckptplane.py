@@ -1,0 +1,162 @@
+"""Checkpoint plane v2 benchmark: bytes written + commit wall on a
+sibling-heavy stage forest.
+
+Builds the workload the delta layer is designed for: a depth-D stage tree
+where every node forks B siblings, each sibling's state mutating only a
+fraction of its parent's parameters (the shared-prefix structure stage
+trees guarantee — siblings differ by the few steps since the fork).  The
+same forest of states is committed through
+
+* ``full``  — every checkpoint serialized in full (``parent_cid`` never
+  passed; the pre-delta behavior), and
+* ``delta`` — each child committed with its fork-point parent cid, so
+  unchanged chunks are stored as references,
+
+both over the v2 zero-copy single-file serializer, plus a ``delta+pool``
+row with the process-pool serializer.  Reports physical bytes written,
+the dedup ratio (logical/physical), and commit wall (puts + flush).  The
+``restore_identical`` flag asserts in-bench that every delta-encoded
+checkpoint reads back bit-identical to its full-serialization twin —
+compression that loses bits would be worse than no compression.
+
+Rows land in ``BENCH_ckptplane.json`` via ``benchmarks/run.py`` and are
+gated by ``check_ckptplane_trend.py`` (dedup floor + commit-wall
+regression vs the committed baseline).
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.train.checkpoint import CheckpointStore
+
+DEPTH = 3            # stage levels below the root
+BRANCH = 3           # siblings forked at every boundary
+STATE_BYTES = 1 << 20        # ~1 MiB per state (two leaves)
+MUTATE_FRAC = 0.25   # fraction of the big leaf a stage advance touches
+
+
+def build_forest(depth: int = DEPTH, branch: int = BRANCH,
+                 state_bytes: int = STATE_BYTES,
+                 mutate_frac: float = MUTATE_FRAC):
+    """(node_id, parent_id | None, state) in commit order (parents first).
+
+    States are two-leaf pytrees (~``state_bytes``); each child copies its
+    parent and perturbs a distinct ``mutate_frac`` slice of the big leaf —
+    the sibling-divergence pattern of a stage tree (same fork point,
+    different few-step suffixes).
+    """
+    n = state_bytes // 8  # two float32 leaves of n and n//63 elements
+    rng = np.random.default_rng(0)
+    root = {"w": rng.standard_normal(n * 2 - n // 8).astype(np.float32),
+            "opt": rng.standard_normal(n // 8).astype(np.float32)}
+    nodes: List[Tuple[str, Optional[str], Dict[str, np.ndarray]]] = [
+        ("n0", None, root)]
+    frontier = [("n0", root)]
+    for d in range(depth):
+        nxt = []
+        for pid, pstate in frontier:
+            for b in range(branch):
+                w = pstate["w"].copy()
+                span = int(len(w) * mutate_frac)
+                off = (b * span) % max(1, len(w) - span)
+                w[off:off + span] += np.float32(0.01 * (b + 1) * (d + 1))
+                opt = pstate["opt"].copy()
+                opt[: len(opt) // 4] *= np.float32(0.9)
+                nid = f"{pid}.{b}"
+                state = {"w": w, "opt": opt}
+                nodes.append((nid, pid, state))
+                nxt.append((nid, state))
+        frontier = nxt
+    return nodes
+
+
+def commit_forest(nodes, use_delta: bool, directory: str,
+                  serializer_procs: int = 0):
+    """Commit every forest node write-behind; returns (store, wall)."""
+    store = CheckpointStore(directory, serializer_procs=serializer_procs)
+    cids: Dict[str, str] = {}
+    t0 = time.perf_counter()
+    for nid, pid, state in nodes:
+        parent = cids.get(pid) if (use_delta and pid is not None) else None
+        cids[nid] = store.put_async(nid, 0, state, parent_cid=parent)
+    store.flush()
+    wall = time.perf_counter() - t0
+    store.close()
+    return store, cids, wall
+
+
+def verify_restores(nodes, store: CheckpointStore, cids: Dict[str, str],
+                    sample: int = 0) -> bool:
+    """Bit-identity of restored states vs the in-memory originals (every
+    node when ``sample`` is 0, else every ``sample``-th)."""
+    store._read_cache.clear()
+    for i, (nid, _, state) in enumerate(nodes):
+        if sample and i % sample:
+            continue
+        got = store.get(cids[nid])
+        for k in state:
+            if np.asarray(got[k]).tobytes() != state[k].tobytes():
+                return False
+    return True
+
+
+def main(csv: bool = True):
+    nodes = build_forest()
+    logical = sum(s["w"].nbytes + s["opt"].nbytes for _, _, s in nodes)
+    rows = []
+    variants = [("full", False, 0), ("delta", True, 0),
+                ("delta+pool", True, 2)]
+    full_bytes = full_wall = None
+    for label, use_delta, procs in variants:
+        with tempfile.TemporaryDirectory() as d:
+            store, cids, wall = commit_forest(nodes, use_delta, d,
+                                              serializer_procs=procs)
+            identical = verify_restores(nodes, store, cids)
+        row = {
+            "path": label,
+            "nodes": len(nodes),
+            "state_mb": round(logical / len(nodes) / 1e6, 2),
+            "bytes_written": store.bytes_written,
+            "dedup_ratio": round(store.dedup_ratio, 2),
+            "delta_commits": store.delta_commits,
+            "full_commits": store.full_commits,
+            "commit_wall_s": round(wall, 3),
+            "restore_identical": identical,
+        }
+        if label == "full":
+            full_bytes, full_wall = store.bytes_written, wall
+        else:
+            row["bytes_reduction"] = round(full_bytes
+                                           / store.bytes_written, 2)
+            row["wall_vs_full"] = round(wall / full_wall, 2)
+        rows.append(row)
+        assert identical, f"{label}: delta restore diverged from original"
+    delta = next(r for r in rows if r["path"] == "delta")
+    assert delta["bytes_reduction"] >= 2.0, (
+        f"delta encoding wrote only {delta['bytes_reduction']}x fewer "
+        "bytes than full serialization on the sibling-heavy forest "
+        "(acceptance floor 2.0x)")
+    if csv:
+        keys = ["path", "nodes", "state_mb", "bytes_written", "dedup_ratio",
+                "delta_commits", "full_commits", "commit_wall_s",
+                "bytes_reduction", "wall_vs_full", "restore_identical"]
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r.get(k, "")) for k in keys))
+    return rows
+
+
+def dump_json(rows, path: str = "BENCH_ckptplane.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "ckptplane", "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
+
+
+if __name__ == "__main__":
+    dump_json(main())

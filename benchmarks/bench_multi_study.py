@@ -19,6 +19,7 @@ shows what a batch-only API would cost.  Rows land in
 from __future__ import annotations
 
 import json
+import tempfile
 from typing import Callable, List
 
 from benchmarks.spaces import (resnet20_space_high_merge,
@@ -47,18 +48,27 @@ def run_multi(space_fn: Callable, n_studies: int, share: bool):
     for i in range(n_studies):
         st = Study.create(db, "resnet20", "cifar10", ("lr", "bs"))
         pairs.append((st, GridTuner(space_fn(seed=i).trials(MAX_STEPS))))
-    return run_studies(pairs, _backend(), n_workers=N_WORKERS, share=share)
+    # directory store: the storage columns measure physical delta-encoded
+    # bytes, not just virtual time
+    with tempfile.TemporaryDirectory() as d:
+        from repro.train.checkpoint import CheckpointStore
+        return run_studies(pairs, _backend(), n_workers=N_WORKERS,
+                           share=share, store=CheckpointStore(d))
 
 
 def run_staggered(space_fn: Callable, n_studies: int, share: bool,
                   gap: float = ARRIVAL_GAP):
     """One long-lived service session; study i arrives at virtual i*gap."""
     db = SearchPlanDB()
-    svc = StudyService(db, _backend(), n_workers=N_WORKERS, share=share)
-    futs = [svc.submit(SPEC, GridTuner(space_fn(seed=i).trials(MAX_STEPS)),
-                       at=i * gap)
-            for i in range(n_studies)]
-    stats = svc.close()
+    with tempfile.TemporaryDirectory() as d:
+        from repro.train.checkpoint import CheckpointStore
+        svc = StudyService(db, _backend(), n_workers=N_WORKERS, share=share,
+                           store=CheckpointStore(d))
+        futs = [svc.submit(SPEC,
+                           GridTuner(space_fn(seed=i).trials(MAX_STEPS)),
+                           at=i * gap)
+                for i in range(n_studies)]
+        stats = svc.close()
     assert all(f.done() for f in futs)
     return stats
 
@@ -72,6 +82,9 @@ def _row(label: str, scenario: str, S: int, trial_sets: List, t, s):
         "gpuh_stage": round(s.gpu_hours, 1),
         "gpuh_saving": round(t.gpu_seconds / s.gpu_seconds, 2),
         "e2e_saving": round(t.end_to_end / s.end_to_end, 2),
+        # storage trajectory of the stage run (delta-encoded commits)
+        "bytes_written": s.ckpt_bytes_written,
+        "dedup_ratio": round(s.dedup_ratio, 2),
     }
 
 

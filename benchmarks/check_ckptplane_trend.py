@@ -1,0 +1,78 @@
+"""CI trend gate for the checkpoint plane (mirrors check_dataplane_trend).
+
+Compares the current ``BENCH_ckptplane.json`` against the committed
+baseline (``benchmarks/baseline_ckptplane.json``) and fails when:
+
+* any row lost restore bit-identity (``restore_identical`` false) —
+  compression that loses bits is corruption, not a perf trade;
+* the delta row's ``bytes_reduction`` over full serialization drops below
+  ``DEDUP_FLOOR`` (the acceptance criterion: the sibling-heavy forest
+  must keep writing >= 2x fewer physical bytes than the full path);
+* the delta commit wall regresses more than ``WALL_THRESHOLD`` vs the
+  baseline, normalized by the ``full`` row — full serialization of the
+  same forest is the machine-speed calibration (same disk, same CPU), so
+  the gate tracks the *relative* cost of delta encoding, which stays
+  meaningful on slower CI machines.
+
+Usage: ``python benchmarks/check_ckptplane_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+DEDUP_FLOOR = 2.0      # min bytes_reduction of delta vs full (acceptance)
+WALL_THRESHOLD = 2.0   # max calibrated commit-wall regression
+
+
+def _row(rows, path: str) -> dict:
+    for r in rows:
+        if r["path"] == path:
+            return r
+    raise SystemExit(f"benchmark row {path!r} missing")
+
+
+def main(current_path: str = "BENCH_ckptplane.json",
+         baseline_path: str = "benchmarks/baseline_ckptplane.json") -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    # ---- bit-identity: non-negotiable on every row
+    for r in cur:
+        if not r.get("restore_identical"):
+            raise SystemExit(
+                f"{r['path']}: restored checkpoints are NOT bit-identical "
+                "to the committed states — the delta path is corrupting")
+    print("restore bit-identity OK on all rows")
+
+    # ---- dedup floor (the PR's acceptance criterion, kept as a gate)
+    delta = _row(cur, "delta")
+    print(f"delta: {delta['bytes_reduction']}x fewer bytes than full "
+          f"(floor {DEDUP_FLOOR}), dedup_ratio {delta['dedup_ratio']}")
+    if delta["bytes_reduction"] < DEDUP_FLOOR:
+        raise SystemExit(
+            f"delta encoding writes only {delta['bytes_reduction']}x fewer "
+            f"bytes than full serialization (floor {DEDUP_FLOOR}x)")
+
+    # ---- commit wall, calibrated by the full row on the same machine
+    calib = (_row(base, "full")["commit_wall_s"]
+             / max(_row(cur, "full")["commit_wall_s"], 1e-9))
+    cur_wall = delta["commit_wall_s"] * calib
+    base_wall = _row(base, "delta")["commit_wall_s"]
+    ratio = cur_wall / max(base_wall, 1e-9)
+    print(f"machine calibration x{calib:.2f} (full row); delta commit wall "
+          f"{cur_wall:.3f}s calibrated vs baseline {base_wall:.3f}s "
+          f"-> ratio {ratio:.2f} (limit {WALL_THRESHOLD:.1f})")
+    if ratio > WALL_THRESHOLD:
+        raise SystemExit(
+            f"commit-wall regression: delta commits are {ratio:.2f}x the "
+            f"committed baseline (limit {WALL_THRESHOLD:.1f}x)")
+    print("trend OK")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    main(*(argv[:2]))

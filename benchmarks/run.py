@@ -5,9 +5,11 @@ blocks; individual benches are importable modules with ``main()``.  The
 control-plane rows land in ``BENCH_stagetree.json`` (gated against the
 committed baseline by ``check_stagetree_trend.py``), the data-plane rows
 in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``), the
-Pallas kernel rows in ``BENCH_kernels.json`` and the multi-study
-upfront/staggered rows in ``BENCH_multistudy.json``, so the perf
-trajectory is tracked across PRs (CI uploads all four as artifacts).
+Pallas kernel rows in ``BENCH_kernels.json``, the checkpoint-plane rows
+in ``BENCH_ckptplane.json`` (gated by ``check_ckptplane_trend.py``) and
+the multi-study upfront/staggered rows in ``BENCH_multistudy.json``, so
+the perf trajectory is tracked across PRs (CI uploads all five as
+artifacts).
 """
 
 from __future__ import annotations
@@ -23,9 +25,9 @@ def dump_stagetree_json(rows, path: str = "BENCH_stagetree.json") -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_dataplane, bench_kernels, bench_merge_rate,
-                            bench_multi_study, bench_single_study,
-                            bench_stagetree)
+    from benchmarks import (bench_ckptplane, bench_dataplane, bench_kernels,
+                            bench_merge_rate, bench_multi_study,
+                            bench_single_study, bench_stagetree)
 
     sections = [
         ("merge-rate table (paper Table 1)", bench_merge_rate),
@@ -34,6 +36,8 @@ def main() -> None:
         ("data plane: per-step loop vs fused chunks vs batched siblings",
          bench_dataplane),
         ("kernel allclose + timing", bench_kernels),
+        ("checkpoint plane: full vs delta-encoded commits on a "
+         "sibling-heavy forest", bench_ckptplane),
         ("single-study: trial vs stage (Figure 12 / Table 5)",
          bench_single_study),
         ("multi-study S1/S2/S4/S8 + staggered service (Figures 13-14)",

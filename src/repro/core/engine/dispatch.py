@@ -82,6 +82,10 @@ class Dispatcher:
         self.builder = builder or StageTreeBuilder(plan)
         self.batch_siblings = batch_siblings
         self.chain_fusion = chain_fusion
+        # store counters at attach time: EngineStats mirrors *deltas* over
+        # this baseline, so a restored session (fresh store, zero counters)
+        # accumulates onto its snapshot totals instead of clobbering them
+        self._store_base = self._seed_store_base()
 
     # ------------------------------------------------------------ scheduling
     def assign(self) -> None:
@@ -92,6 +96,7 @@ class Dispatcher:
         while self._assign_round():
             pass
         self._sync_kernel_stats()
+        self._sync_store_stats()
 
     def _sync_kernel_stats(self) -> None:
         """Mirror the backend's kernel-plane counters (trace-time call/
@@ -100,6 +105,51 @@ class Dispatcher:
         if calls is not None:
             self.stats.kernel_calls = calls
             self.stats.kernel_fallbacks = self.backend.kernel_fallbacks
+
+    # EngineStats field <- CheckpointStore counter (mirrored as deltas)
+    _STORE_MIRROR = {
+        "ckpt_delta_bytes": "delta_bytes",
+        "ckpt_full_bytes": "full_bytes",
+        "ckpt_logical_bytes": "logical_bytes",
+        "ckpt_bytes_written": "bytes_written",
+        "ckpt_delta_commits": "delta_commits",
+        "ckpt_delta_rebases": "delta_rebases",
+        "ckpt_mem_hits": "mem_hits",
+        "ckpt_disk_hits": "disk_hits",
+        "ckpt_remote_hits": "remote_hits",
+        "ckpt_store_misses": "store_misses",
+        "ckpt_tier_promotions": "tier_promotions",
+        "ckpt_tier_demotions": "tier_demotions",
+        "ckpt_tmp_reclaimed": "tmp_reclaimed",
+    }
+
+    def _store_counters(self) -> Dict[str, int]:
+        base = {f: getattr(self.store, a, 0)
+                for f, a in self._STORE_MIRROR.items()}
+        return base
+
+    def _seed_store_base(self) -> Dict[str, int]:
+        base = self._store_counters()
+        # the init-time temp sweep happened before any dispatcher could
+        # attach; zero its baseline so the first sync surfaces the count
+        base["ckpt_tmp_reclaimed"] = 0
+        return base
+
+    def _sync_store_stats(self) -> None:
+        """Mirror the checkpoint-plane counters into ``EngineStats``.
+
+        The store outlives engines (service sessions share one store
+        across studies, restores attach a fresh store to snapshot stats),
+        so each dispatcher accumulates only the counter *growth since it
+        attached* — snapshot/restore identity of the logical run is
+        preserved while physical-store counters still sum correctly."""
+        now = self._store_counters()
+        for field, _ in self._STORE_MIRROR.items():
+            grown = now[field] - self._store_base[field]
+            if grown:
+                setattr(self.stats, field,
+                        getattr(self.stats, field) + grown)
+        self._store_base = now
 
     def _assign_round(self) -> bool:
         """One scheduling round; True when a checkpoint miss warrants a
@@ -112,8 +162,9 @@ class Dispatcher:
             return False
         self.stats.rounds += 1
         missed = False
-        # stage_id -> (state, finish_time) for cross-chain chaining this round
-        produced: Dict[str, Tuple[Any, float]] = {}
+        # stage_id -> (state, finish_time, cid) for cross-chain chaining
+        # this round; the cid seeds delta encoding in consumer chains
+        produced: Dict[str, Tuple[Any, float, Optional[str]]] = {}
         taken: set = set()
 
         if self.batch_siblings:
@@ -163,17 +214,19 @@ class Dispatcher:
         return out
 
     # ---------------------------------------------------------- resume input
-    def _load_resume(self, nid: str, step: int) -> Optional[Any]:
-        """State of checkpoint (node, step), or None after degrading a
-        vanished checkpoint to recompute: count the miss and make the plan
-        forget the stale entry so the next round re-derives the request.
-        A checkpoint the plan no longer lists (already forgotten earlier
-        this round) is not a fresh miss — one eviction counts once."""
+    def _load_resume(self, nid: str, step: int) -> Optional[Tuple[Any, str]]:
+        """(state, cid) of checkpoint (node, step), or None after degrading
+        a vanished checkpoint to recompute: count the miss and make the
+        plan forget the stale entry so the next round re-derives the
+        request.  A checkpoint the plan no longer lists (already forgotten
+        earlier this round) is not a fresh miss — one eviction counts once.
+        The cid rides along as the fork-point parent for delta-encoding
+        the chain's first boundary checkpoint."""
         cid = self.plan.node(nid).ckpts.get(step)
         if cid is not None:
             t0 = _time.perf_counter()
             try:
-                return self.store.get(cid)
+                return self.store.get(cid), cid
             except KeyError:
                 pass
             finally:
@@ -182,17 +235,20 @@ class Dispatcher:
             self.plan.forget_ckpt(nid, step)
         return None
 
-    def _put_boundary(self, path_key: str, stop: int, state: Any) -> str:
+    def _put_boundary(self, path_key: str, stop: int, state: Any,
+                      parent_cid: Optional[str] = None) -> str:
         """Deposit one stage-boundary checkpoint — write-behind under chain
         fusion (enqueue only; the commit overlaps the next stage's
         compute), synchronous otherwise.  The synchronous slice is timed
         into ``ckpt_save_seconds`` either way."""
         t0 = _time.perf_counter()
         if self.chain_fusion:
-            cid = self.store.put_async(path_key, stop, state)
+            cid = self.store.put_async(path_key, stop, state,
+                                       parent_cid=parent_cid)
             self.stats.ckpt_async_writes += 1
         else:
-            cid = self.store.put(path_key, stop, state)
+            cid = self.store.put(path_key, stop, state,
+                                 parent_cid=parent_cid)
         self.stats.ckpt_save_seconds += _time.perf_counter() - t0
         self.stats.ckpt_saves += 1
         return cid
@@ -242,21 +298,24 @@ class Dispatcher:
 
     # ------------------------------------------------------- chain execution
     def _execute_chain(self, path: List[Stage], worker: Worker,
-                       produced: Dict[str, Tuple[Any, float]]) -> bool:
+                       produced: Dict[str, Tuple[Any, float,
+                                                 Optional[str]]]) -> bool:
         """Execute one chain; True when a checkpoint miss deferred it."""
         head = path[0]
         t = max(self.events.time, worker.busy_until)
         load_s, save_s = self.backend.overheads()
 
-        # ------- input state
+        # ------- input state (parent_cid = the fork-point checkpoint the
+        # chain's first boundary delta-encodes against)
         if head.resume is not None:
             nid, step = head.resume
-            state = self._load_resume(nid, step)
-            if state is None:
+            loaded = self._load_resume(nid, step)
+            if loaded is None:
                 # resume checkpoint externally dropped — leave the requests
                 # pending; the retried round re-derives them from the plan
                 self.scheduler.on_stages_unassigned(self.plan, path)
                 return True
+            state, parent_cid = loaded
             t += load_s
             self.stats.gpu_seconds += load_s * self.gpus_per_worker
             self.stats.ckpt_loads += 1
@@ -269,16 +328,18 @@ class Dispatcher:
                 self.scheduler.on_stages_unassigned(self.plan, path)
                 return False
             # produced by another chain in this same round
-            state, parent_done = produced[head.parent]
+            state, parent_done, parent_cid = produced[head.parent]
             t = max(t, parent_done) + load_s
             self.stats.gpu_seconds += load_s * self.gpus_per_worker
             self.stats.ckpt_loads += 1
         else:
             state = self.backend.init_state()
+            parent_cid = None
 
         worker.idle = False
         if self.chain_fusion:
-            self._run_chain_fused(path, worker, state, t, produced)
+            self._run_chain_fused(path, worker, state, t, produced,
+                                  parent_cid)
             return False
 
         for st in path:
@@ -307,8 +368,10 @@ class Dispatcher:
             if st.steps > 0:
                 self.plan.record_profile(
                     st.node_id, (sim if sim is not None else wall) / st.steps)
-            cid = self._put_boundary(ctx.path_key, st.stop, state)
-            produced[st.stage_id] = (state, t)
+            cid = self._put_boundary(ctx.path_key, st.stop, state,
+                                     parent_cid=parent_cid)
+            parent_cid = cid   # next boundary deltas against this one
+            produced[st.stage_id] = (state, t, cid)
             self.events.push(t, "stage", {
                 "node_id": st.node_id, "stop": st.stop, "cid": cid,
                 "metrics": metrics, "worker": worker.wid,
@@ -319,7 +382,9 @@ class Dispatcher:
     # ------------------------------------------------- fused chain execution
     def _run_chain_fused(self, path: List[Stage], worker: Worker,
                          state: Any, t: float,
-                         produced: Dict[str, Tuple[Any, float]]) -> None:
+                         produced: Dict[str, Tuple[Any, float,
+                                                   Optional[str]]],
+                         parent_cid: Optional[str] = None) -> None:
         """Execute the whole chain through ``backend.run_chain``: one fused
         call, device-resident carry across boundaries, write-behind
         checkpoints — with per-stage events, profiles and virtual durations
@@ -344,9 +409,15 @@ class Dispatcher:
                     state = self.backend.run_stage(state, ctx)
                 bstates.append(state)
         # boundary checkpoints enter the pending cache here (write-behind);
-        # the enqueue slice is measured and subtracted from the wall below
-        cids = [self._put_boundary(ctx.path_key, st.stop, s)
-                for st, ctx, s in zip(path, ctxs, bstates)]
+        # the enqueue slice is measured and subtracted from the wall below.
+        # Each boundary deltas against the previous one (the head against
+        # the chain's fork point), so a chain commits one delta per stage.
+        cids = []
+        for st, ctx, s in zip(path, ctxs, bstates):
+            cid = self._put_boundary(ctx.path_key, st.stop, s,
+                                     parent_cid=parent_cid)
+            cids.append(cid)
+            parent_cid = cid
         metrics_l = [self.backend.evaluate(s, ctx) if st.report else None
                      for st, ctx, s in zip(path, ctxs, bstates)]
         wall = self._adjusted_wall(wall0, comp0, save0)
@@ -372,7 +443,7 @@ class Dispatcher:
             self._credit_stage(st, dur)
             if fused:
                 self.stats.chain_fused_stages += 1
-            produced[st.stage_id] = (s, t)
+            produced[st.stage_id] = (s, t, cid)
             self.events.push(t, "stage", {
                 "node_id": st.node_id, "stop": st.stop, "cid": cid,
                 "metrics": metrics, "worker": worker.wid,
@@ -381,7 +452,8 @@ class Dispatcher:
 
     # ------------------------------------------------------- group execution
     def _execute_group(self, group: List[List[Stage]], worker: Worker,
-                       produced: Dict[str, Tuple[Any, float]],
+                       produced: Dict[str, Tuple[Any, float,
+                                                 Optional[str]]],
                        taken: set) -> Tuple[bool, bool]:
         """Execute a sibling-chain group as batched backend calls on
         ``worker`` (one call per stage level; depth 1 is the classic
@@ -398,6 +470,9 @@ class Dispatcher:
         missed = False
         members: List[List[Stage]] = []
         states: List[Any] = []
+        # per-member fork-point cid — seeds delta encoding of each
+        # member's first boundary checkpoint (siblings share the parent)
+        parents: List[Optional[str]] = []
         loaded: Dict[str, Any] = {}   # resume cid -> state (dedup sibling loads)
         for chain in group:
             head = chain[0]
@@ -407,16 +482,19 @@ class Dispatcher:
                 cid = self.plan.node(nid).ckpts.get(step)
                 state = loaded.get(cid) if cid is not None else None
                 if state is None:
-                    state = self._load_resume(nid, step)
-                    if state is None:
+                    got = self._load_resume(nid, step)
+                    if got is None:
                         missed = True
                         self.scheduler.on_stages_unassigned(self.plan, chain)
                         continue
+                    state, cid = got
                     loaded[cid] = state
             else:
                 state = self.backend.init_state()
+                cid = None
             members.append(chain)
             states.append(state)
+            parents.append(cid)
         if len(members) < 2:
             # group fell apart — refund survivors; the chain scheduler picks
             # them up (they are not marked taken)
@@ -457,10 +535,19 @@ class Dispatcher:
                     for s, ctxs in zip(states, ctx_chains)]
             batched = False
         # write-behind boundary checkpoints for every (member, stage);
-        # content addressing dedups exactly as per-stage puts
-        cids = [[self._put_boundary(ctx.path_key, st.stop, s)
-                 for st, ctx, s in zip(chain, ctxs, out)]
-                for chain, ctxs, out in zip(members, ctx_chains, outs)]
+        # content addressing dedups exactly as per-stage puts.  Each
+        # member threads its own parent down the chain, so every sibling
+        # deltas against the shared fork point and then its own boundary.
+        cids = []
+        for chain, ctxs, out, pcid in zip(members, ctx_chains, outs,
+                                          parents):
+            member_cids = []
+            for st, ctx, s in zip(chain, ctxs, out):
+                cid = self._put_boundary(ctx.path_key, st.stop, s,
+                                         parent_cid=pcid)
+                member_cids.append(cid)
+                pcid = cid
+            cids.append(member_cids)
         metrics_l = [[self.backend.evaluate(s, ctx) if st.report else None
                       for st, ctx, s in zip(chain, ctxs, out)]
                      for chain, ctxs, out in zip(members, ctx_chains, outs)]
@@ -499,7 +586,7 @@ class Dispatcher:
             t += dur
             self.stats.gpu_seconds += dur * self.gpus_per_worker
             for m, st in enumerate(level):
-                produced[st.stage_id] = (outs[m][j], t)
+                produced[st.stage_id] = (outs[m][j], t, cids[m][j])
                 self.events.push(t, "stage", {
                     "node_id": st.node_id, "stop": st.stop,
                     "cid": cids[m][j], "metrics": metrics_l[m][j],

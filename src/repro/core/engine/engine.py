@@ -161,11 +161,33 @@ class EngineStats:
     kernel_fallbacks: int = 0     # kernel→oracle fallbacks traced
     ckpt_save_seconds: float = 0.0  # synchronous slice of store puts
     ckpt_load_seconds: float = 0.0  # store gets (resume loads)
+    # ---- checkpoint plane v2 (mirrored from CheckpointStore as growth
+    # deltas per attached dispatcher; see Dispatcher._sync_store_stats) ----
+    ckpt_delta_bytes: int = 0       # file bytes of delta-encoded commits
+    ckpt_full_bytes: int = 0        # file bytes of full-snapshot commits
+    ckpt_logical_bytes: int = 0     # full-serialization-equivalent bytes
+    ckpt_bytes_written: int = 0     # physical bytes committed (delta+full)
+    ckpt_delta_commits: int = 0
+    ckpt_delta_rebases: int = 0     # depth-bound chains rebased to full
+    ckpt_mem_hits: int = 0          # gets served from pending/memory/LRU
+    ckpt_disk_hits: int = 0         # gets served from the local disk tier
+    ckpt_remote_hits: int = 0       # gets served from the remote tier
+    ckpt_store_misses: int = 0      # gets no tier could serve (KeyError)
+    ckpt_tier_promotions: int = 0   # remote blobs rehydrated onto disk
+    ckpt_tier_demotions: int = 0    # LRU disk blobs pushed to remote
+    ckpt_tmp_reclaimed: int = 0     # stale temp files swept at store init
     by_study: Dict[str, StudyStats] = field(default_factory=dict)
 
     @property
     def gpu_hours(self) -> float:
         return self.gpu_seconds / 3600.0
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Full-serialization bytes per physical byte this engine wrote
+        (>1 ⇔ delta encoding is saving storage)."""
+        return (self.ckpt_logical_bytes / self.ckpt_bytes_written
+                if self.ckpt_bytes_written else 1.0)
 
     def study(self, study_id: str) -> StudyStats:
         return self.by_study.setdefault(study_id, StudyStats())
@@ -363,6 +385,8 @@ class ExecutionEngine:
         pending boundary checkpoint durably committed, writer failures
         surfaced) and stamp ``end_to_end``.  Idempotent."""
         self.store.flush()
+        # pick up counter growth from the flushed write-behind commits
+        self.dispatcher._sync_store_stats()
         self.stats.end_to_end = self.events.time
         return self.stats
 

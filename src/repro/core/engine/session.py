@@ -56,7 +56,10 @@ from repro.train.checkpoint import CheckpointStore
 __all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
            "restore_engine", "save_session", "load_session"]
 
-SESSION_FORMAT_VERSION = 1
+# v2: EngineStats grew the checkpoint-plane v2 counters (delta/full bytes,
+# per-tier hits, promotions/demotions) — v1 snapshots lack the fields and
+# must be re-captured with the matching repro version
+SESSION_FORMAT_VERSION = 2
 
 
 @dataclass

@@ -25,6 +25,7 @@ from repro.core import SearchPlanDB, StudyService, StudySpec
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridSearchSpace, GridTuner
 from repro.core.hpseq import Constant, Exponential, MultiStep, StepLR, Warmup
+from repro.train.checkpoint import CheckpointStore, DirectoryObjectStore
 
 
 def _space(seed: int, steps: int) -> GridSearchSpace:
@@ -50,10 +51,31 @@ def _report(stats) -> None:
     print(f"served: {stats.gpu_hours:.1f} GPU-h, "
           f"e2e {stats.end_to_end / 3600:.2f} h, "
           f"{stats.steps_run} steps, {stats.rounds} scheduling rounds")
+    if stats.ckpt_bytes_written:
+        print(f"ckpt plane: {stats.ckpt_bytes_written / 1e6:.1f} MB written "
+              f"({stats.ckpt_delta_commits} delta commits, "
+              f"dedup {stats.dedup_ratio:.2f}x), tiers "
+              f"mem/disk/remote {stats.ckpt_mem_hits}/{stats.ckpt_disk_hits}"
+              f"/{stats.ckpt_remote_hits} hits, "
+              f"{stats.ckpt_tier_demotions} demotions, "
+              f"{stats.ckpt_tier_promotions} promotions, "
+              f"{stats.ckpt_tmp_reclaimed} stale tmp reclaimed")
     for sid, ss in sorted(stats.by_study.items()):
         print(f"  {sid}: {ss.gpu_seconds / 3600:7.1f} GPU-h  "
               f"{ss.steps_run:6d} steps served  "
               f"{ss.instant_results:3d} instant")
+
+
+def _build_store(args):
+    """Tiered checkpoint plane from the CLI knobs (None = in-memory)."""
+    if not args.ckpt_dir:
+        return None
+    remote = (DirectoryObjectStore(args.remote_dir) if args.remote_dir
+              else None)
+    cap = (int(args.disk_capacity_mb * 1e6)
+           if args.disk_capacity_mb else None)
+    return CheckpointStore(args.ckpt_dir, remote=remote,
+                           disk_capacity_bytes=cap)
 
 
 def main() -> None:
@@ -74,7 +96,19 @@ def main() -> None:
     ap.add_argument("--snapshot-at", type=float, default=None,
                     help="virtual time to snapshot at; the live session is "
                          "then discarded and the run finishes via restore")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for the checkpoint plane (enables "
+                         "delta-encoded durable checkpoints; default: "
+                         "in-memory store)")
+    ap.add_argument("--remote-dir", default=None,
+                    help="directory standing in for the remote object-store "
+                         "tier (requires --ckpt-dir)")
+    ap.add_argument("--disk-capacity-mb", type=float, default=None,
+                    help="local disk tier capacity; LRU blobs past it "
+                         "demote to --remote-dir")
     args = ap.parse_args()
+    if args.remote_dir and not args.ckpt_dir:
+        ap.error("--remote-dir requires --ckpt-dir")
 
     def backend():
         return SimulatedTrainer(base_seconds_per_step=args.sec_per_step,
@@ -82,7 +116,7 @@ def main() -> None:
 
     db = SearchPlanDB()
     svc = StudyService(db, backend(), n_workers=args.workers,
-                       policy=args.policy)
+                       policy=args.policy, store=_build_store(args))
     _submit_all(svc, args)
 
     if args.snapshot_at is not None:
@@ -95,7 +129,11 @@ def main() -> None:
               f"({done}/{len(svc.futures)} studies done); "
               "discarding live session, resuming from disk")
         del svc                       # the "crash"
-        svc = StudyService.restore(SearchPlanDB(), args.session, backend())
+        # a fresh store over the same tiers: committed blobs (local or
+        # demoted to remote) are re-indexed at init and picked up by the
+        # restore's eager recompute-on-miss check
+        svc = StudyService.restore(SearchPlanDB(), args.session, backend(),
+                                   store=_build_store(args))
 
     stats = svc.close()
     _report(stats)

@@ -7,11 +7,41 @@ Any two trials — in the same study or different studies — whose
 hyper-parameter values coincide up to ``step`` resolve to the same key and
 therefore share the checkpoint, which is the entire reuse mechanism.
 
-Two backends:
+Checkpoint plane v2 — three composable layers over the same public API
+(``put`` / ``put_async`` / ``get`` / ``evict`` / ``flush``):
 
-* in-memory (default) — for tests, simulation and single-process studies;
-* directory spill     — ``.npz``-serialized leaves + JSON treedef, the
-  layout a real deployment would put on a distributed file system.
+**Delta encoding.**  Stage-tree siblings fork from shared prefixes, so
+most committed checkpoints are near-duplicates of their fork-point parent.
+``put(..., parent_cid=...)`` (threaded from the dispatcher, which knows
+every boundary's fork point) splits each leaf into fixed-size chunks,
+content-hashes them against the parent's chunk index, and commits only the
+changed chunks plus a reference map.  Reconstruction resolves the delta
+chain recursively; chains are bounded by ``max_delta_depth`` — a commit
+whose parent already sits at the bound is *rebased* to a full snapshot, so
+no read ever walks more than ``max_delta_depth`` ancestors.  A delta whose
+parent has vanished reads as missing (``KeyError``) — recompute-on-miss
+upstream makes that safe, exactly like any other lost blob.
+
+**Zero-copy serializer.**  One file per cid: an 8-byte header length, a
+JSON header (leaf dtypes/shapes + per-chunk digests + the pickled-treedef
+length — the old ``.tree`` sidecar is folded in, removing a file and an
+``os.replace`` per commit), the pickled treedef, then the inline chunk
+payload written directly from each leaf's ``memoryview`` — no
+``np.savez``, no ``BytesIO`` staging copy.  Reads are ``np.frombuffer``
+views over the payload.  ``serializer_procs > 0`` moves chunk hashing +
+encoding into a process pool so commits stop serializing on the writer
+thread's GIL (at the cost of one buffer copy into the worker).
+
+**Tiered backend.**  host LRU read cache → local disk → an injectable
+remote :class:`ObjectStore` (directory-backed fake provided).  When
+``disk_capacity_bytes`` is set and a remote tier is attached, the
+background writer demotes least-recently-used blobs past the capacity to
+the remote tier (the local file is dropped, the remote copy is the
+replica); a read that misses disk fetches from remote and *promotes* the
+blob back.  Every tier is safely lossy — recompute-on-miss upstream
+re-derives anything a tier dropped — so demotion needs no correctness
+machinery, only the ``tier_promotions`` / ``tier_demotions`` /
+``remote_bytes_*`` counters.
 
 Write-behind layer (chain-fused execution): :meth:`put_async` records the
 checkpoint in a device-resident *pending* cache and hands the commit
@@ -24,11 +54,11 @@ the write instead of leaking the file).  :meth:`flush` is the barrier:
 it blocks until every pending write has committed (engine shutdown, and
 anything that needs the bytes durably on disk).
 
-Directory-backend read path: a bounded LRU cache keeps the most recently
-``get``-ed trees deserialized (repeated resumes of a hot checkpoint no
-longer re-read and re-unpickle the ``.npz`` each time), ``bytes_read``
-counts actual disk traffic, and the ``__len__`` disk scan is cached and
-maintained incrementally instead of re-running ``os.listdir`` per call.
+Directory hygiene: construction sweeps stale ``*.tmp`` files (a writer
+thread reaped between serialize and publish leaks them) into
+``tmp_reclaimed``, and builds the disk-cid index once — ``__len__`` /
+``committed_ids`` never re-``listdir`` the directory; the index is
+maintained incrementally by publish/evict/demote/promote.
 
 Beyond-paper: reference-counted eviction (``evict``) with
 recompute-on-miss handled upstream (the engine simply re-derives the stage
@@ -37,12 +67,13 @@ from the search plan if a resume checkpoint is gone).
 
 from __future__ import annotations
 
-import io
+import hashlib
 import json
 import os
+import pickle
 import threading
 from collections import OrderedDict, deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,7 +83,11 @@ try:  # jax is always present in this repo, but the store works without it
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
 
-__all__ = ["CheckpointStore", "stack_pytrees", "unstack_pytree"]
+__all__ = ["CheckpointStore", "ObjectStore", "DirectoryObjectStore",
+           "stack_pytrees", "unstack_pytree"]
+
+BLOB_FORMAT = 2                     # single-file header+payload layout
+DEFAULT_CHUNK = 1 << 16             # 64 KiB content-hash granularity
 
 
 def _tree_flatten(tree: Any):
@@ -80,27 +115,205 @@ def unstack_pytree(tree: Any, n: int) -> List[Any]:
     return [jax.tree.map(lambda x, g=g: x[g], tree) for g in range(n)]
 
 
+# ---------------------------------------------------------------------------
+# remote tier interface
+# ---------------------------------------------------------------------------
+
+
+class ObjectStore:
+    """Injectable remote-tier interface (S3/GCS in a deployment).
+
+    Keys are checkpoint cids, values are opaque blob bytes.  ``get`` /
+    ``delete`` raise ``KeyError`` for absent keys; ``keys()`` enumerates
+    (used once at attach time to seed the remote index)."""
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def contains(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def keys(self) -> Iterable[str]:
+        raise NotImplementedError
+
+
+class DirectoryObjectStore(ObjectStore):
+    """Directory-backed :class:`ObjectStore` fake — the test/dev stand-in
+    for a real object store (atomic publish via tmp + rename)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _p(self, key: str) -> str:
+        return os.path.join(self.directory, key.replace("/", "_") + ".blob")
+
+    def put(self, key: str, data: bytes) -> None:
+        tmp = f"{self._p(key)}.{threading.get_ident()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._p(key))
+
+    def get(self, key: str) -> bytes:
+        try:
+            with open(self._p(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise KeyError(key)
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._p(key))
+        except FileNotFoundError:
+            raise KeyError(key)
+
+    def contains(self, key: str) -> bool:
+        return os.path.exists(self._p(key))
+
+    def keys(self) -> Iterable[str]:
+        return [f[:-len(".blob")] for f in os.listdir(self.directory)
+                if f.endswith(".blob")]
+
+
+# ---------------------------------------------------------------------------
+# blob encoding (pure functions — shared by the inline and process-pool
+# serializers; must stay module-level picklable)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_view(x: Any) -> Tuple[np.ndarray, memoryview]:
+    """Contiguous host array + zero-copy byte view of a pytree leaf."""
+    arr = np.asarray(x)
+    if not arr.flags["C_CONTIGUOUS"]:
+        # NOT unconditional ascontiguousarray: it promotes 0-d scalars
+        # to 1-d, corrupting the recorded leaf shape
+        arr = np.ascontiguousarray(arr)
+    return arr, memoryview(arr.reshape(-1).view(np.uint8))
+
+
+def _digest(buf) -> str:
+    return hashlib.blake2b(buf, digest_size=16).hexdigest()
+
+
+def _encode_leaves(bufs: Sequence, dtypes: Sequence[str],
+                   shapes: Sequence[tuple],
+                   parent: Optional[List[List[Tuple[str, int]]]],
+                   chunk: int):
+    """Chunk + hash every leaf buffer; against ``parent`` (per-leaf chunk
+    digest lists) emit references instead of inline bytes for unchanged
+    chunks.  Returns ``(leaf_metas, parts, digests, any_ref, logical)``
+    where ``parts`` are the inline payload buffers in write order."""
+    leaf_metas, parts, digests = [], [], []
+    any_ref, logical = False, 0
+    for i, (buf, dt, shape) in enumerate(zip(bufs, dtypes, shapes)):
+        size = len(buf)
+        logical += size
+        pdigs = (parent[i] if parent is not None and i < len(parent)
+                 else None)
+        chunks, ldigs = [], []
+        for ci, off in enumerate(range(0, size, chunk)):
+            n = min(chunk, size - off)
+            piece = buf[off:off + n]
+            h = _digest(piece)
+            ldigs.append((h, n))
+            if pdigs is not None and ci < len(pdigs) and pdigs[ci] == (h, n):
+                chunks.append([h, n, 0])          # reference into parent
+                any_ref = True
+            else:
+                chunks.append([h, n, 1])          # inline
+                parts.append(piece)
+        leaf_metas.append({"d": dt, "s": list(shape), "n": size,
+                           "c": chunks})
+        digests.append(ldigs)
+    return leaf_metas, parts, digests, any_ref, logical
+
+
+def _encode_leaves_pooled(bufs: List[bytes], dtypes: List[str],
+                          shapes: List[tuple],
+                          parent: Optional[List[List[Tuple[str, int]]]],
+                          chunk: int):
+    """Process-pool entry point: same as :func:`_encode_leaves` but ships
+    one joined payload back (buffers don't survive pickling as views)."""
+    parent = ([[tuple(c) for c in leaf] for leaf in parent]
+              if parent is not None else None)
+    leaf_metas, parts, digests, any_ref, logical = _encode_leaves(
+        bufs, dtypes, shapes, parent, chunk)
+    return leaf_metas, b"".join(parts), digests, any_ref, logical
+
+
+class _Staged(tuple):
+    """Serialized-but-unpublished commit: ``(kind, depth, digests,
+    payload_len, logical_len, file_len, tmp_path)``."""
+    __slots__ = ()
+
+    kind = property(lambda s: s[0])
+    depth = property(lambda s: s[1])
+    digests = property(lambda s: s[2])
+    payload_len = property(lambda s: s[3])
+    logical_len = property(lambda s: s[4])
+    file_len = property(lambda s: s[5])
+    tmp = property(lambda s: s[6])
+
+
 class CheckpointStore:
-    """put/get pytrees by (path_key, step); optionally spill to a directory.
+    """put/get pytrees by (path_key, step); optionally spill to tiers.
 
     ``read_cache_entries`` bounds the directory backend's LRU read cache
-    (0 disables it); the in-memory backend needs no cache.
-    """
+    (0 disables it); the in-memory backend needs no cache.  ``remote``
+    attaches an :class:`ObjectStore` tier below the disk; with
+    ``disk_capacity_bytes`` set, LRU blobs past the capacity demote to it
+    in the background.  ``parent_cid`` on the put paths enables delta
+    encoding (serialized tiers only — the in-memory backend stores live
+    objects and needs no encoding)."""
 
     def __init__(self, directory: Optional[str] = None,
-                 read_cache_entries: int = 32):
+                 read_cache_entries: int = 32,
+                 remote: Optional[ObjectStore] = None,
+                 disk_capacity_bytes: Optional[int] = None,
+                 max_delta_depth: int = 4,
+                 chunk_bytes: int = DEFAULT_CHUNK,
+                 serializer_procs: int = 0):
         self.directory = directory
         if directory:
             os.makedirs(directory, exist_ok=True)
         self._mem: Dict[str, Any] = {}
-        self.bytes_written = 0
-        self.bytes_read = 0
+        self.remote = remote
+        self.disk_capacity_bytes = disk_capacity_bytes
+        self.max_delta_depth = int(max_delta_depth)
+        self.chunk_bytes = int(chunk_bytes)
+        # ---- traffic counters ----
+        self.bytes_written = 0      # physical file bytes committed to disk
+        self.bytes_read = 0         # physical file bytes read off disk
+        self.logical_bytes = 0      # full-serialization-equivalent bytes
+        self.delta_bytes = 0        # file bytes of delta-kind commits
+        self.full_bytes = 0         # file bytes of full-kind commits
+        self.delta_commits = 0
+        self.full_commits = 0
+        self.delta_rebases = 0      # depth-bound hits rebased to full
+        self.delta_fallbacks = 0    # parent meta unavailable -> full
         self.puts = 0
         self.async_puts = 0
         self.gets = 0
         self.hits = 0
+        # ---- per-tier read accounting ----
+        self.mem_hits = 0           # pending cache / memory map / LRU cache
+        self.disk_hits = 0
+        self.remote_hits = 0
+        self.store_misses = 0
+        self.tier_promotions = 0
+        self.tier_demotions = 0
+        self.remote_bytes_read = 0
+        self.remote_bytes_written = 0
+        self.tmp_reclaimed = 0
         # ---- write-behind state (all guarded by _cv's lock) ----
         self._pending: Dict[str, Any] = {}   # cid -> tree awaiting commit
+        self._pending_parent: Dict[str, Optional[str]] = {}
         self._work: deque = deque()          # commit order
         self._cancelled: set = set()         # evicted while commit in flight
         self._cv = threading.Condition()
@@ -109,26 +322,69 @@ class CheckpointStore:
         # ---- directory read path ----
         self.read_cache_entries = int(read_cache_entries)
         self._read_cache: "OrderedDict[str, Any]" = OrderedDict()
-        self._disk_count: Optional[int] = None   # cached __len__ scan
+        # ---- tier indexes (guarded by _cv) ----
+        # disk index doubles as the demotion LRU: cid -> file bytes
+        self._disk_cids: "OrderedDict[str, int]" = OrderedDict()
+        self._disk_bytes = 0
+        self._remote_cids: set = set()
+        # cid -> (delta depth, per-leaf chunk digests) for delta encoding
+        self._blob_meta: Dict[str, Tuple[int, List[List[Tuple[str, int]]]]] = {}
+        self._serializer_procs = int(serializer_procs)
+        self._pool = None
+        if directory:
+            self._init_scan()
+        if remote is not None:
+            self._remote_cids.update(remote.keys())
+
+    def _init_scan(self) -> None:
+        """One-time directory scan: build the incremental disk-cid index
+        and reap stale temp files a reaped writer thread left behind."""
+        for f in sorted(os.listdir(self.directory)):
+            p = os.path.join(self.directory, f)
+            if f.endswith(".tmp"):
+                try:
+                    os.remove(p)
+                    self.tmp_reclaimed += 1
+                except OSError:  # pragma: no cover - racing sweeper
+                    pass
+            elif f.endswith(".ckpt"):
+                try:
+                    size = os.path.getsize(p)
+                except OSError:  # pragma: no cover - racing eviction
+                    continue
+                self._disk_cids[f[:-len(".ckpt")]] = size
+                self._disk_bytes += size
 
     # -------------------------------------------------------------- keys
     @staticmethod
     def ckpt_id(path_key: str, step: int) -> str:
         return f"{path_key}@{step}"
 
+    @property
+    def dedup_ratio(self) -> float:
+        """Full-serialization bytes per physical byte written (>= 1 when
+        delta encoding is saving storage; 1.0 with nothing written)."""
+        return (self.logical_bytes / self.bytes_written
+                if self.bytes_written else 1.0)
+
     # --------------------------------------------------------------- put
-    def put(self, path_key: str, step: int, tree: Any) -> str:
+    def put(self, path_key: str, step: int, tree: Any,
+            parent_cid: Optional[str] = None) -> str:
         cid = self.ckpt_id(path_key, step)
         self.puts += 1
         if self._revoke_or_dedup(cid):
             return cid  # content already produced by a sibling — dedup
         if self.directory:
-            self._write_disk(cid, tree)
+            staged = self._serialize_disk(cid, tree, parent_cid)
+            with self._cv:   # counters/publish shared with the writer thread
+                self._publish_disk(cid, staged)
+            self._demote_excess()
         else:
             self._mem[cid] = tree
         return cid
 
-    def put_async(self, path_key: str, step: int, tree: Any) -> str:
+    def put_async(self, path_key: str, step: int, tree: Any,
+                  parent_cid: Optional[str] = None) -> str:
         """Write-behind ``put``: the tree enters the pending cache (served
         to readers immediately) and the commit — host transfer, serialize,
         disk write — happens on the background writer thread.  Returns the
@@ -140,6 +396,7 @@ class CheckpointStore:
             return cid
         with self._cv:
             self._pending[cid] = tree
+            self._pending_parent[cid] = parent_cid
             self._work.append(cid)
             self.async_puts += 1
             if self._writer is None:
@@ -161,8 +418,9 @@ class CheckpointStore:
             if cid in self._cancelled:
                 self._cancelled.discard(cid)
                 return False
-        return cid in self._mem or (
-            self.directory is not None and os.path.exists(self._path(cid)))
+            if cid in self._disk_cids or cid in self._remote_cids:
+                return True
+        return cid in self._mem
 
     def _known(self, cid: str) -> bool:
         with self._cv:
@@ -172,8 +430,9 @@ class CheckpointStore:
                 # an in-flight commit of this content is being undone; its
                 # disk bytes are untrustworthy until the undo lands
                 return False
-        return cid in self._mem or (
-            self.directory is not None and os.path.exists(self._path(cid)))
+            if cid in self._disk_cids or cid in self._remote_cids:
+                return True
+        return cid in self._mem
 
     # --------------------------------------------------------- writer thread
     _IDLE_EXIT_SECONDS = 5.0   # idle writer threads retire themselves
@@ -191,15 +450,17 @@ class CheckpointStore:
                             return
                 cid = self._work.popleft()
                 tree = self._pending.get(cid)
+                parent_cid = self._pending_parent.get(cid)
             if tree is None:
                 continue  # superseded (a revoked re-put already committed)
             try:
-                staged = (self._serialize_disk(cid, tree)
+                staged = (self._serialize_disk(cid, tree, parent_cid)
                           if self.directory else None)
             except BaseException as e:  # surfaced at the next flush()
                 with self._cv:
                     self._write_error = e
                     self._pending.pop(cid, None)
+                    self._pending_parent.pop(cid, None)
                     self._cancelled.discard(cid)
                     self._cv.notify_all()
                 continue
@@ -211,26 +472,28 @@ class CheckpointStore:
                         # temps to discard
                         self._cancelled.discard(cid)
                         if staged is not None:
-                            for tmp in staged[1:]:
-                                os.remove(tmp)
+                            os.remove(staged.tmp)
                     else:
                         # publish + state transition in ONE critical
                         # section so __len__ never sees a cid as both
                         # pending and on disk
                         if staged is not None:
-                            self._publish_disk(cid, *staged)
+                            self._publish_disk(cid, staged)
                         elif cid in self._pending:
                             self._mem[cid] = tree
                         self._pending.pop(cid, None)
+                        self._pending_parent.pop(cid, None)
                 except BaseException as e:
                     # a publish/cancel failure must never strand the cid in
                     # _pending/_cancelled: flush() would deadlock instead
                     # of surfacing the error
                     self._write_error = e
                     self._pending.pop(cid, None)
+                    self._pending_parent.pop(cid, None)
                     self._cancelled.discard(cid)
                 finally:
                     self._cv.notify_all()
+            self._demote_excess()
 
     def flush(self) -> None:
         """Block until every pending write has committed and every
@@ -242,6 +505,13 @@ class CheckpointStore:
             if self._write_error is not None:
                 err, self._write_error = self._write_error, None
                 raise RuntimeError("checkpoint write-behind failed") from err
+
+    def close(self) -> None:
+        """Flush, then release the optional serializer process pool."""
+        self.flush()
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
 
     @property
     def pending_writes(self) -> int:
@@ -256,30 +526,31 @@ class CheckpointStore:
             cancelled = cid in self._cancelled
         if tree is not None:        # in-flight write: serve the live object
             self.hits += 1
+            self.mem_hits += 1
             return tree
         if cancelled:               # evicted mid-commit: gone to readers
+            self.store_misses += 1
             raise KeyError(f"checkpoint {cid!r} not in store")
         if cid in self._mem:
             self.hits += 1
+            self.mem_hits += 1
             return self._mem[cid]
         if self.directory:
             cached = self._read_cache.get(cid)
             if cached is not None:
                 self._read_cache.move_to_end(cid)
                 self.hits += 1
+                self.mem_hits += 1
                 return cached
-            p = self._path(cid)
-            if os.path.exists(p):
-                try:
-                    tree = self._read_disk(cid)
-                except FileNotFoundError:
-                    # concurrently evicted between exists() and open():
-                    # missing, not corrupt — callers key recompute-on-miss
-                    # off KeyError
-                    raise KeyError(f"checkpoint {cid!r} not in store")
-                self.hits += 1
-                self._cache_read(cid, tree)
-                return tree
+            try:
+                tree = self._read_disk(cid)
+            except KeyError:
+                self.store_misses += 1
+                raise
+            self.hits += 1
+            self._cache_read(cid, tree)
+            return tree
+        self.store_misses += 1
         raise KeyError(f"checkpoint {cid!r} not in store")
 
     def contains(self, cid: str) -> bool:
@@ -288,13 +559,13 @@ class CheckpointStore:
     # ---------------------------------------------------- session persistence
     def committed_ids(self) -> set:
         """Ids of every durably-committed checkpoint (session snapshots:
-        call :meth:`flush` first so nothing is left pending)."""
+        call :meth:`flush` first so nothing is left pending).  Served from
+        the incrementally-maintained tier indexes — no directory scan."""
         with self._cv:
             ids = set(self._pending) - self._cancelled
+            ids |= set(self._disk_cids)
+            ids |= self._remote_cids
         ids |= set(self._mem)
-        if self.directory:
-            ids |= {f[:-len(".ckpt")] for f in os.listdir(self.directory)
-                    if f.endswith(".ckpt")}
         return ids
 
     def snapshot_trees(self) -> Optional[Dict[str, Any]]:
@@ -320,6 +591,7 @@ class CheckpointStore:
         with self._cv:
             if cid in self._pending:
                 del self._pending[cid]
+                self._pending_parent.pop(cid, None)
                 try:
                     # not yet picked up by the writer: nothing to undo
                     self._work.remove(cid)
@@ -332,22 +604,35 @@ class CheckpointStore:
         if cid in self._mem:
             del self._mem[cid]
             return True
-        if self.directory and os.path.exists(self._path(cid)):
-            self._remove_disk(cid)
-            return True
-        return False
+        removed = False
+        with self._cv:
+            self._blob_meta.pop(cid, None)
+            size = self._disk_cids.pop(cid, None)
+            if size is not None:
+                self._disk_bytes -= size
+                removed = True
+            on_remote = cid in self._remote_cids
+            self._remote_cids.discard(cid)
+        if size is not None:
+            try:
+                os.remove(self._path(cid))
+            except FileNotFoundError:  # pragma: no cover - demote race
+                pass
+        if on_remote:
+            try:
+                self.remote.delete(cid)
+                removed = True
+            except KeyError:  # pragma: no cover - external cleanup
+                pass
+        return removed
 
     def __len__(self) -> int:
         # one critical section: publish + pending-removal are atomic on the
         # writer side, so a cid is never counted as both pending and on disk
         with self._cv:
             n = len(self._mem) + len(self._pending)
-            if self.directory:
-                if self._disk_count is None:
-                    self._disk_count = sum(
-                        1 for f in os.listdir(self.directory)
-                        if f.endswith(".ckpt"))
-                n += self._disk_count
+            if self.directory or self.remote is not None:
+                n += len(self._disk_cids.keys() | self._remote_cids)
         return n
 
     # ---------------------------------------------------------- disk I/O
@@ -355,70 +640,307 @@ class CheckpointStore:
         safe = cid.replace("/", "_")
         return os.path.join(self.directory, safe + ".ckpt")
 
-    def _write_disk(self, cid: str, tree: Any) -> None:
-        staged = self._serialize_disk(cid, tree)
-        with self._cv:   # counters/publish shared with the writer thread
-            self._publish_disk(cid, *staged)
+    def _parent_meta(self, parent_cid: Optional[str]):
+        """(depth, chunk digests) of a committed parent blob, for delta
+        encoding — from the in-memory meta map, else recovered from the
+        parent's on-disk header (a restored process deltas against blobs
+        it never wrote).  None when the parent can't serve as a base."""
+        if parent_cid is None:
+            return None
+        with self._cv:
+            meta = self._blob_meta.get(parent_cid)
+            on_disk = parent_cid in self._disk_cids
+            on_remote = parent_cid in self._remote_cids
+        if meta is None and on_disk:
+            try:
+                hdr = self._read_header(parent_cid)
+            except (KeyError, OSError, ValueError):
+                return None
+            meta = (hdr["depth"],
+                    [[(h, n) for h, n, _ in leaf["c"]]
+                     for leaf in hdr["leaves"]])
+            with self._cv:
+                self._blob_meta[parent_cid] = meta
+        if meta is None or not (on_disk or on_remote):
+            return None
+        return meta
 
-    def _serialize_disk(self, cid: str, tree: Any) -> tuple:
-        """Serialize to thread-unique temp files (no lock held; the final
-        path is untouched).  Returns ``(payload_len, tmp, tree_tmp)`` for
-        :meth:`_publish_disk`."""
+    def _serialize_disk(self, cid: str, tree: Any,
+                        parent_cid: Optional[str] = None) -> _Staged:
+        """Serialize to a thread-unique temp file (no lock held; the final
+        path is untouched).  Delta-encodes against ``parent_cid`` when its
+        chunk index is available and its delta chain is under the depth
+        bound; otherwise commits a full snapshot."""
         leaves, treedef = _tree_flatten(tree)
-        buf = io.BytesIO()
-        arrs = {f"leaf{i}": np.asarray(x) for i, x in enumerate(leaves)}
-        np.savez(buf, **arrs)
-        payload = buf.getvalue()
-        meta = json.dumps({"treedef": str(treedef), "n": len(leaves)})
+        tree_blob = pickle.dumps(treedef)
+        arrs, views = zip(*(_leaf_view(x) for x in leaves)) if leaves else ((), ())
+        dtypes = [a.dtype.str for a in arrs]
+        shapes = [a.shape for a in arrs]
+
+        parent = self._parent_meta(parent_cid)
+        depth = 0
+        if parent is not None and parent[0] >= self.max_delta_depth:
+            self.delta_rebases += 1     # chain at the bound: rebase to full
+            parent = None
+        elif parent_cid is not None and parent is None:
+            self.delta_fallbacks += 1   # parent gone / unreadable / pending
+        pdigs = parent[1] if parent is not None else None
+
+        if self._serializer_procs > 0 and views:
+            pool = self._ensure_pool()
+            fut = pool.submit(_encode_leaves_pooled,
+                              [bytes(v) for v in views], dtypes, shapes,
+                              pdigs, self.chunk_bytes)
+            leaf_metas, payload, digests, any_ref, logical = fut.result()
+            parts = [payload]
+        else:
+            leaf_metas, parts, digests, any_ref, logical = _encode_leaves(
+                views, dtypes, shapes, pdigs, self.chunk_bytes)
+
+        if any_ref:
+            kind, depth = "delta", parent[0] + 1
+        else:
+            # nothing referenced (fully divergent, or no usable parent):
+            # commit as a self-contained snapshot with no chain dependency
+            kind, depth, parent_cid = "full", 0, None
+            for leaf in leaf_metas:
+                for c in leaf["c"]:
+                    c[2] = 1
+
+        header = json.dumps({
+            "v": BLOB_FORMAT, "kind": kind, "parent": parent_cid,
+            "depth": depth, "tree_len": len(tree_blob),
+            "leaves": leaf_metas}).encode("utf-8")
         path = self._path(cid)
-        tid = threading.get_ident()
-        tmp, tree_tmp = f"{path}.{tid}.tmp", f"{path}.tree.{tid}.tmp"
+        tmp = f"{path}.{threading.get_ident()}.tmp"
+        payload_len = 0
         with open(tmp, "wb") as f:
-            header = meta.encode("utf-8")
             f.write(len(header).to_bytes(8, "little"))
             f.write(header)
-            f.write(payload)
-        # treedef structure is re-derivable only with the original aux data;
-        # store a pickled treedef alongside for exact reconstruction.
-        import pickle
-        with open(tree_tmp, "wb") as f:
-            pickle.dump(treedef, f)
-        return len(payload), tmp, tree_tmp
+            f.write(tree_blob)
+            for piece in parts:
+                f.write(piece)          # direct memoryview write, no staging
+                payload_len += len(piece)
+        file_len = 8 + len(header) + len(tree_blob) + payload_len
+        # logical = what a *full* commit of this state would have written
+        # (same header/treedef framing, every chunk inline), so
+        # logical/physical is exactly 1.0 without deltas and the dedup
+        # ratio isolates the delta layer's savings
+        logical_len = 8 + len(header) + len(tree_blob) + logical
+        return _Staged((kind, depth, digests, payload_len,
+                        logical_len, file_len, tmp))
 
-    def _publish_disk(self, cid: str, payload_len: int, tmp: str,
-                      tree_tmp: str) -> None:
-        """Atomically publish staged temp files (caller holds ``_cv``):
-        rename the sidecar first and the payload last, so a crash (or the
-        daemon writer being reaped at interpreter exit) can never leave a
-        half-written file at the address readers probe with exists()."""
+    def _ensure_pool(self):
+        if self._pool is None:
+            import multiprocessing
+            from concurrent.futures import ProcessPoolExecutor
+            # spawn, not fork: the host process has live JAX/writer threads
+            # and forking a multithreaded process can deadlock the children.
+            self._pool = ProcessPoolExecutor(
+                max_workers=self._serializer_procs,
+                mp_context=multiprocessing.get_context("spawn"))
+        return self._pool
+
+    def _publish_disk(self, cid: str, staged: _Staged) -> None:
+        """Atomically publish a staged temp file (caller holds ``_cv``):
+        one ``os.replace`` — header, treedef and payload travel in a single
+        blob, so a crash (or the daemon writer being reaped at interpreter
+        exit) can never leave a half-written file at the address readers
+        probe."""
         path = self._path(cid)
-        existed = os.path.exists(path)
-        os.replace(tree_tmp, path + ".tree")
-        os.replace(tmp, path)
-        self.bytes_written += payload_len
-        if self._disk_count is not None and not existed:
-            self._disk_count += 1
+        os.replace(staged.tmp, path)
+        prev = self._disk_cids.pop(cid, None)
+        if prev is not None:
+            self._disk_bytes -= prev
+        self._disk_cids[cid] = staged.file_len
+        self._disk_bytes += staged.file_len
+        self._blob_meta[cid] = (staged.depth, staged.digests)
+        self.bytes_written += staged.file_len
+        self.logical_bytes += staged.logical_len
+        if staged.kind == "delta":
+            self.delta_bytes += staged.file_len
+            self.delta_commits += 1
+        else:
+            self.full_bytes += staged.file_len
+            self.full_commits += 1
 
-    def _remove_disk(self, cid: str) -> None:
-        os.remove(self._path(cid))
-        tree_file = self._path(cid) + ".tree"
-        if os.path.exists(tree_file):
-            os.remove(tree_file)
-        self._read_cache.pop(cid, None)
+    # ------------------------------------------------------------ tiering
+    def _demote_excess(self) -> None:
+        """Move LRU disk blobs past ``disk_capacity_bytes`` to the remote
+        tier (remote copy lands *before* the local file goes, so readers
+        always find the blob somewhere)."""
+        if self.remote is None or not self.disk_capacity_bytes:
+            return
+        while True:
+            with self._cv:
+                if (self._disk_bytes <= self.disk_capacity_bytes
+                        or len(self._disk_cids) <= 1):
+                    return
+                cid, size = next(iter(self._disk_cids.items()))
+            try:
+                with open(self._path(cid), "rb") as f:
+                    data = f.read()
+            except FileNotFoundError:  # pragma: no cover - evict race
+                with self._cv:
+                    prev = self._disk_cids.pop(cid, None)
+                    if prev is not None:
+                        self._disk_bytes -= prev
+                continue
+            self.remote.put(cid, data)
+            with self._cv:
+                self._remote_cids.add(cid)
+                prev = self._disk_cids.pop(cid, None)
+                if prev is not None:
+                    self._disk_bytes -= prev
+                self.tier_demotions += 1
+                self.remote_bytes_written += len(data)
+            try:
+                os.remove(self._path(cid))
+            except FileNotFoundError:  # pragma: no cover - evict race
+                pass
+
+    def _fetch_blob(self, cid: str, count_hit: bool = False) -> bytearray:
+        """Raw blob bytes from the disk tier, else the remote tier (with
+        promotion back to disk).  Returned as a *writable* buffer so
+        ``np.frombuffer`` leaves are mutable in place (trainers update
+        restored state without a defensive copy).  Raises ``KeyError``
+        when no tier holds the cid."""
         with self._cv:
-            if self._disk_count is not None:
-                self._disk_count -= 1
+            on_disk = cid in self._disk_cids
+        if on_disk:
+            try:
+                with open(self._path(cid), "rb") as f:
+                    data = bytearray(f.read())
+                with self._cv:
+                    self.bytes_read += len(data)
+                    if cid in self._disk_cids:
+                        self._disk_cids.move_to_end(cid)
+                    if count_hit:
+                        self.disk_hits += 1
+                return data
+            except FileNotFoundError:
+                pass        # demoted (or evicted) underfoot: try remote
+        if self.remote is not None:
+            with self._cv:
+                on_remote = cid in self._remote_cids
+            if on_remote:
+                try:
+                    data = bytearray(self.remote.get(cid))
+                except KeyError:
+                    raise KeyError(f"checkpoint {cid!r} not in store")
+                with self._cv:
+                    self.remote_bytes_read += len(data)
+                    if count_hit:
+                        self.remote_hits += 1
+                self._promote(cid, data)
+                return data
+        raise KeyError(f"checkpoint {cid!r} not in store")
 
-    def _read_disk(self, cid: str) -> Any:
-        import pickle
+    def _promote(self, cid: str, data: bytes) -> None:
+        """Write a remote-fetched blob back to the disk tier (the remote
+        copy stays — it is the replica)."""
+        path = self._path(cid)
+        tmp = f"{path}.promote.{threading.get_ident()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        with self._cv:
+            os.replace(tmp, path)
+            prev = self._disk_cids.pop(cid, None)
+            if prev is not None:
+                self._disk_bytes -= prev
+            self._disk_cids[cid] = len(data)
+            self._disk_bytes += len(data)
+            self.tier_promotions += 1
+        self._demote_excess()
+
+    # ----------------------------------------------------------- disk read
+    @staticmethod
+    def _parse_header(data: bytes) -> Tuple[dict, int]:
+        """(header dict, offset of the treedef pickle).  Raises KeyError
+        for blobs this format cannot read (legacy v1 files degrade to
+        recompute-on-miss instead of crashing)."""
+        hlen = int.from_bytes(data[:8], "little")
+        try:
+            hdr = json.loads(data[8:8 + hlen])
+        except Exception:
+            raise KeyError("unreadable checkpoint header")
+        if not isinstance(hdr, dict) or hdr.get("v") != BLOB_FORMAT:
+            raise KeyError(
+                f"checkpoint blob format {hdr.get('v') if isinstance(hdr, dict) else '?'}"
+                f" != {BLOB_FORMAT}")
+        return hdr, 8 + hlen
+
+    def _read_header(self, cid: str) -> dict:
+        """Header only (no payload decode) — delta-encoding recovery."""
         with open(self._path(cid), "rb") as f:
             hlen = int.from_bytes(f.read(8), "little")
-            f.read(hlen)  # meta (informational)
-            payload = f.read()
-        with open(self._path(cid) + ".tree", "rb") as f:
-            treedef = pickle.load(f)
-        with self._cv:
-            self.bytes_read += len(payload)
-        with np.load(io.BytesIO(payload)) as z:
-            leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+            hdr, _ = self._parse_header(
+                hlen.to_bytes(8, "little") + f.read(hlen))
+        return hdr
+
+    def _leaf_buffers(self, cid: str, depth_left: int,
+                      count_hit: bool = False) -> List:
+        """Raw per-leaf byte buffers of ``cid``, resolving delta chains
+        recursively (bounded by ``depth_left``)."""
+        if depth_left < 0:
+            raise KeyError(f"delta chain under {cid!r} exceeds the depth "
+                           "bound — refusing to recurse")
+        data = self._fetch_blob(cid, count_hit=count_hit)
+        hdr, off = self._parse_header(data)
+        payload = memoryview(data)[off + hdr["tree_len"]:]
+        if hdr["kind"] == "full":
+            out, pos = [], 0
+            for leaf in hdr["leaves"]:
+                out.append(payload[pos:pos + leaf["n"]])
+                pos += leaf["n"]
+            return out
+        parent_bufs = self._leaf_buffers(hdr["parent"], depth_left - 1)
+        out, pos = [], 0
+        for i, leaf in enumerate(hdr["leaves"]):
+            buf = bytearray(leaf["n"])
+            loff = 0
+            for h, n, inline in leaf["c"]:
+                if inline:
+                    buf[loff:loff + n] = payload[pos:pos + n]
+                    pos += n
+                else:
+                    buf[loff:loff + n] = parent_bufs[i][loff:loff + n]
+                loff += n
+            out.append(buf)
+        return out
+
+    def _read_disk(self, cid: str) -> Any:
+        """Reconstruct the pytree of ``cid`` from the serialized tiers
+        (delta chains resolved against ancestors; leaves are zero-copy
+        ``np.frombuffer`` views over the blob payload)."""
+        data = self._fetch_blob(cid, count_hit=True)
+        hdr, off = self._parse_header(data)
+        treedef = pickle.loads(data[off:off + hdr["tree_len"]])
+        payload = memoryview(data)[off + hdr["tree_len"]:]
+        if hdr["kind"] == "full":
+            bufs, pos = [], 0
+            for leaf in hdr["leaves"]:
+                bufs.append(payload[pos:pos + leaf["n"]])
+                pos += leaf["n"]
+        else:
+            parent_bufs = self._leaf_buffers(hdr["parent"],
+                                             self.max_delta_depth)
+            bufs, pos = [], 0
+            for i, leaf in enumerate(hdr["leaves"]):
+                buf = bytearray(leaf["n"])
+                loff = 0
+                for h, n, inline in leaf["c"]:
+                    if inline:
+                        buf[loff:loff + n] = payload[pos:pos + n]
+                        pos += n
+                    else:
+                        buf[loff:loff + n] = parent_bufs[i][loff:loff + n]
+                    loff += n
+                bufs.append(buf)
+        leaves = []
+        for leaf, buf in zip(hdr["leaves"], bufs):
+            dt = np.dtype(leaf["d"])
+            arr = np.frombuffer(buf, dtype=dt,
+                                count=leaf["n"] // dt.itemsize)
+            leaves.append(arr.reshape(leaf["s"]))
         return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -147,10 +147,13 @@ def test_evicted_checkpoint_leaves_read_cache(tmp_path):
         store.get(cid)
 
 
-def test_len_disk_scan_is_cached(tmp_path, monkeypatch):
-    store = CheckpointStore(str(tmp_path))
+def test_disk_index_is_incremental_no_rescans(tmp_path, monkeypatch):
+    """The disk-cid index is built once at construction and maintained
+    incrementally: ``__len__``/``committed_ids`` never re-``listdir``."""
+    seed = CheckpointStore(str(tmp_path))
     for i in range(3):
-        store.put("pk", i, tree(i))
+        seed.put("pk", i, tree(i))
+
     scans = {"n": 0}
     real_listdir = os.listdir
 
@@ -159,26 +162,42 @@ def test_len_disk_scan_is_cached(tmp_path, monkeypatch):
         return real_listdir(path)
 
     monkeypatch.setattr(ckpt_mod.os, "listdir", counting_listdir)
+    store = CheckpointStore(str(tmp_path))      # re-open over existing blobs
+    assert scans["n"] == 1                      # the one init-time scan
     assert len(store) == 3
-    assert len(store) == 3
-    assert scans["n"] == 1                         # one scan, then cached
-    store.put("pk", 3, tree(3))                    # incremental maintenance
+    assert len(store.committed_ids()) == 3
+    store.put("pk", 3, tree(3))                 # incremental maintenance
     assert len(store) == 4
     store.evict(store.ckpt_id("pk", 0))
     assert len(store) == 3
     cid = store.put_async("pk", 9, tree(9))
     store.flush()
     assert len(store) == 4
-    assert scans["n"] == 1
+    assert cid in store.committed_ids()
+    assert scans["n"] == 1                      # still only the init scan
 
 
-def test_disk_evict_removes_treedef_sidecar(tmp_path):
+def test_single_file_commit_no_sidecar_and_tmp_sweep(tmp_path):
+    """v2 blobs carry the treedef in the header — a commit is exactly one
+    file, and evict removes exactly it.  Stale temp files (a writer reaped
+    between serialize and publish) are swept at construction and counted."""
     store = CheckpointStore(str(tmp_path))
     cid = store.put("pk", 1, tree(1))
-    assert os.path.exists(store._path(cid) + ".tree")
-    store.evict(cid)
-    assert not os.path.exists(store._path(cid))
     assert not os.path.exists(store._path(cid) + ".tree")
+    assert os.listdir(str(tmp_path)) == [os.path.basename(store._path(cid))]
+    store.evict(cid)
+    assert os.listdir(str(tmp_path)) == []
+
+    # simulate a writer thread reaped mid-commit: orphaned temp files
+    cid2 = store.put("pk", 2, tree(2))
+    for j in range(2):
+        with open(store._path(cid) + f".{j}.tmp", "wb") as f:
+            f.write(b"partial")
+    reopened = CheckpointStore(str(tmp_path))
+    assert reopened.tmp_reclaimed == 2
+    assert not any(f.endswith(".tmp") for f in os.listdir(str(tmp_path)))
+    assert len(reopened) == 1                   # the committed blob survives
+    assert_tree_equal(reopened.get(cid2), tree(2))
 
 
 def test_evict_then_reput_of_same_content_survives(monkeypatch, tmp_path):

@@ -1,0 +1,372 @@
+"""Checkpoint plane v2: delta encoding, tiering and their crash paths.
+
+Delta-encoded commits chain child→parent, the tiered backend moves blobs
+between disk and a remote object store underneath readers, and the
+write-behind layer lets evictions race in-flight commits — this file
+covers the interleavings where those three mechanisms meet: an eviction
+landing while a delta is being serialized, a delta whose parent has been
+demoted off the local disk, chains hitting the rebase depth bound, and
+snapshot/restore identity over a tiered store.
+"""
+
+import os
+import threading
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import SearchPlanDB, StudyService, StudySpec
+from repro.core.hpseq import Constant, MultiStep
+from repro.core.trainer import SimulatedTrainer
+from repro.core.tuners import GridSearchSpace, GridTuner
+from repro.train import checkpoint as ckpt_mod
+from repro.train.checkpoint import (CheckpointStore, DirectoryObjectStore,
+                                    ObjectStore)
+
+
+def big_tree(i: int, mutate_from=None, frac: float = 0.25):
+    """~1 MB two-leaf state; with ``mutate_from``, only the leading
+    ``frac`` of the big leaf differs (a stage advancing part of a model)."""
+    if mutate_from is None:
+        rng = np.random.default_rng(i)
+        w = rng.standard_normal(250_000).astype(np.float32)
+    else:
+        w = mutate_from["w"].copy()
+        n = int(len(w) * frac)
+        w[:n] += np.float32(1 + i)
+    return {"w": w, "step": np.int64(i)}
+
+
+def assert_tree_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert int(a["step"]) == int(b["step"])
+
+
+# ---------------------------------------------------------------------------
+# delta encoding
+# ---------------------------------------------------------------------------
+
+
+def test_delta_commit_writes_less_and_restores_identically(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    base = big_tree(0)
+    cid0 = store.put("pk", 10, base)
+    full_written = store.bytes_written
+    child = big_tree(1, mutate_from=base)
+    cid1 = store.put("pk", 20, child, parent_cid=cid0)
+    delta_written = store.bytes_written - full_written
+
+    assert store.full_commits == 1 and store.delta_commits == 1
+    # 25% of one leaf mutated -> the delta is a small fraction of the full
+    assert delta_written < full_written / 2
+    assert store.dedup_ratio > 1.3
+
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid1), child)
+    assert_tree_equal(store.get(cid0), base)
+
+
+def test_fully_divergent_child_falls_back_to_full(tmp_path):
+    """A child sharing no chunk with its parent commits as a standalone
+    full snapshot — no pointless zero-reference delta chain."""
+    store = CheckpointStore(str(tmp_path))
+    cid0 = store.put("pk", 10, big_tree(0))
+    cid1 = store.put("pk", 20, big_tree(99), parent_cid=cid0)   # unrelated
+    assert store.delta_commits == 0 and store.full_commits == 2
+    assert store._read_header(cid1)["kind"] == "full"
+    store.evict(cid0)
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid1), big_tree(99))   # no parent needed
+
+
+def test_delta_chain_rebases_at_depth_bound(tmp_path):
+    store = CheckpointStore(str(tmp_path), max_delta_depth=3)
+    t = big_tree(0)
+    cid = store.put("pk", 0, t)
+    for i in range(1, 8):
+        t = big_tree(i, mutate_from=t, frac=0.1)
+        cid = store.put("pk", i * 10, t, parent_cid=cid)
+    # depths walk 1,2,3 then the next child rebases to a fresh full (0)
+    # and the walk restarts: 1,2,3 again — one rebase over 7 children
+    assert store.delta_rebases == 1
+    assert store.full_commits == 2          # the root + one rebase
+    assert store._read_header(cid)["depth"] <= 3
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid), t)    # deepest chain resolves
+
+
+def test_missing_parent_meta_falls_back_to_full(tmp_path):
+    """A parent cid the store cannot index (never committed here, blob
+    gone) must not poison the put — the child commits full."""
+    store = CheckpointStore(str(tmp_path))
+    cid = store.put("pk", 10, big_tree(0), parent_cid="ghost@0")
+    assert store.delta_fallbacks == 1
+    assert store.full_commits == 1
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid), big_tree(0))
+
+
+def test_delta_whose_parent_was_evicted_reads_as_missing(tmp_path):
+    """Recompute-on-miss territory: resolving a delta whose parent blob is
+    gone from every tier raises KeyError (not a crash, not garbage)."""
+    base = big_tree(0)
+    store = CheckpointStore(str(tmp_path))
+    cid0 = store.put("pk", 10, base)
+    cid1 = store.put("pk", 20, big_tree(1, mutate_from=base),
+                     parent_cid=cid0)
+    assert store.delta_commits == 1
+    store.evict(cid0)
+    store._read_cache.clear()
+    with pytest.raises(KeyError):
+        store.get(cid1)
+    assert store.store_misses >= 1
+
+
+# ---------------------------------------------------------------------------
+# evict racing an in-flight delta commit
+# ---------------------------------------------------------------------------
+
+
+def test_evict_during_delta_commit_discards_the_write(monkeypatch, tmp_path):
+    """An eviction landing while the writer thread serializes a delta must
+    cancel the publish: no file appears, readers see a miss, and a later
+    re-put of the same cid commits cleanly."""
+    store = CheckpointStore(str(tmp_path))
+    base = big_tree(0)
+    cid0 = store.put("pk", 10, base)
+    child = big_tree(1, mutate_from=base)
+
+    in_serialize = threading.Event()
+    release = threading.Event()
+    real_serialize = store._serialize_disk
+
+    def stalling_serialize(cid, tree, parent_cid=None):
+        in_serialize.set()
+        assert release.wait(timeout=10)
+        return real_serialize(cid, tree, parent_cid)
+
+    monkeypatch.setattr(store, "_serialize_disk", stalling_serialize)
+    cid1 = store.put_async("pk", 20, child, parent_cid=cid0)
+    assert in_serialize.wait(timeout=10)     # writer is mid-serialization
+    assert store.evict(cid1)                 # eviction races the commit
+    release.set()
+    store.flush()
+
+    assert not os.path.exists(store._path(cid1))
+    assert not any(f.endswith(".tmp") for f in os.listdir(str(tmp_path)))
+    with pytest.raises(KeyError):
+        store.get(cid1)
+    # same-content re-put after the cancelled commit publishes normally
+    monkeypatch.setattr(store, "_serialize_disk", real_serialize)
+    assert store.put_async("pk", 20, child, parent_cid=cid0) == cid1
+    store.flush()
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid1), child)
+
+
+# ---------------------------------------------------------------------------
+# tiered backend
+# ---------------------------------------------------------------------------
+
+
+def test_delta_restore_with_parent_demoted_to_remote(tmp_path):
+    """Resolving a delta chain whose parent blob was demoted off the local
+    disk fetches the parent from the remote tier and promotes it back."""
+    remote = DirectoryObjectStore(str(tmp_path / "remote"))
+    store = CheckpointStore(str(tmp_path / "disk"), remote=remote,
+                            disk_capacity_bytes=1_200_000)
+    base = big_tree(0)
+    cid0 = store.put("pk", 10, base)
+    children = []
+    t = base
+    for i in range(1, 4):
+        t = big_tree(i, mutate_from=t, frac=0.2)
+        children.append((store.put("pk", 10 + i, t, parent_cid=cid0
+                                   if i == 1 else children[-1][0]), t))
+    # capacity pressure pushed the LRU (the full base blob) to remote
+    assert store.tier_demotions >= 1
+    assert remote.contains(cid0)
+    assert not os.path.exists(store._path(cid0))
+
+    store._read_cache.clear()
+    cid_last, t_last = children[-1]
+    assert_tree_equal(store.get(cid_last), t_last)     # chain via remote
+    assert store.remote_hits + store.tier_promotions >= 1
+    assert store.remote_bytes_read > 0
+
+
+def test_eviction_removes_remote_replica(tmp_path):
+    remote = DirectoryObjectStore(str(tmp_path / "remote"))
+    store = CheckpointStore(str(tmp_path / "disk"), remote=remote,
+                            disk_capacity_bytes=1)     # demote everything
+    cid = store.put("pk", 10, big_tree(0))
+    store.put("pk", 20, big_tree(1))                   # pressure: 10 demotes
+    if not remote.contains(cid):                       # ordering safety
+        store._demote_excess()
+    assert store.evict(cid)
+    assert not remote.contains(cid)
+    assert cid not in store.committed_ids()
+
+
+def test_reopened_store_indexes_remote_tier(tmp_path):
+    """A fresh store over the same tiers serves blobs that only exist
+    remotely — the committed index unions both tiers, no directory scan
+    of the remote needed beyond attach-time keys()."""
+    remote = DirectoryObjectStore(str(tmp_path / "remote"))
+    store = CheckpointStore(str(tmp_path / "disk"), remote=remote,
+                            disk_capacity_bytes=600_000)
+    cids = [store.put("pk", i, big_tree(i)) for i in range(3)]
+    assert store.tier_demotions >= 2
+
+    reopened = CheckpointStore(str(tmp_path / "disk"), remote=remote)
+    assert set(cids) <= reopened.committed_ids()
+    assert len(reopened) == 3
+    for i, cid in enumerate(cids):
+        assert reopened.contains(cid)
+        assert_tree_equal(reopened.get(cid), big_tree(i))
+
+
+class FlakyRemote(ObjectStore):
+    """Remote whose blobs vanish (external lifecycle policy)."""
+
+    def __init__(self):
+        self.blobs = {}
+
+    def put(self, key, data):
+        self.blobs[key] = data
+
+    def get(self, key):
+        if key not in self.blobs:
+            raise KeyError(key)
+        return self.blobs[key]
+
+    def delete(self, key):
+        del self.blobs[key]
+
+    def contains(self, key):
+        return key in self.blobs
+
+    def keys(self):
+        return list(self.blobs)
+
+
+def test_remote_losing_blobs_degrades_to_key_error(tmp_path):
+    remote = FlakyRemote()
+    store = CheckpointStore(str(tmp_path), remote=remote,
+                            disk_capacity_bytes=1)
+    cid = store.put("pk", 10, big_tree(0))
+    store.put("pk", 20, big_tree(1))
+    assert remote.contains(cid)
+    remote.blobs.clear()                   # lifecycle policy reaped it
+    store._read_cache.clear()
+    with pytest.raises(KeyError):
+        store.get(cid)
+
+
+def test_legacy_format_blob_degrades_to_miss(tmp_path):
+    """A pre-v2 blob at a probed path reads as missing (recompute-on-miss
+    upstream), never as garbage or a crash."""
+    store = CheckpointStore(str(tmp_path))
+    cid = store.ckpt_id("pk", 10)
+    with open(store._path(cid), "wb") as f:
+        f.write(b"PK\x03\x04 this is not a v2 blob" * 10)
+    reopened = CheckpointStore(str(tmp_path))
+    assert reopened.contains(cid)          # indexed by extension...
+    with pytest.raises(KeyError):
+        reopened.get(cid)                  # ...but unreadable -> miss
+
+
+# ---------------------------------------------------------------------------
+# process-pool serializer
+# ---------------------------------------------------------------------------
+
+
+def test_process_pool_serializer_matches_inline(tmp_path):
+    base = big_tree(0)
+    child = big_tree(1, mutate_from=base)
+    inline = CheckpointStore(str(tmp_path / "a"))
+    pooled = CheckpointStore(str(tmp_path / "b"), serializer_procs=1)
+    try:
+        for s in (inline, pooled):
+            c0 = s.put("pk", 10, base)
+            s.put_async("pk", 20, child, parent_cid=c0)
+            s.flush()
+        assert pooled.delta_commits == inline.delta_commits == 1
+        # identical encoding decisions -> identical physical bytes
+        assert pooled.bytes_written == inline.bytes_written
+        pooled._read_cache.clear()
+        assert_tree_equal(pooled.get(pooled.ckpt_id("pk", 20)), child)
+    finally:
+        pooled.close()
+        inline.close()
+
+
+# ---------------------------------------------------------------------------
+# engine integration: stats mirror + tiered snapshot/restore identity
+# ---------------------------------------------------------------------------
+
+SPEC = StudySpec("m", "d", ("lr", "bs"))
+
+
+def _space():
+    return GridSearchSpace(
+        fns={"lr": [Constant(0.1),
+                    MultiStep(0.1, [60], values=[0.1, 0.01]),
+                    MultiStep(0.1, [60], values=[0.1, 0.02])],
+             "bs": [Constant(64)]})
+
+
+def det(stats):
+    import dataclasses
+    return dataclasses.replace(
+        stats, ckpt_save_seconds=0.0, ckpt_load_seconds=0.0,
+        ckpt_delta_bytes=0, ckpt_full_bytes=0, ckpt_logical_bytes=0,
+        ckpt_bytes_written=0, ckpt_delta_commits=0, ckpt_delta_rebases=0,
+        ckpt_mem_hits=0, ckpt_disk_hits=0, ckpt_remote_hits=0,
+        ckpt_store_misses=0, ckpt_tier_promotions=0, ckpt_tier_demotions=0,
+        ckpt_tmp_reclaimed=0)
+
+
+def _tiered(tmp_path, capacity=40_000):
+    return CheckpointStore(
+        str(tmp_path / "disk"),
+        remote=DirectoryObjectStore(str(tmp_path / "remote")),
+        disk_capacity_bytes=capacity)
+
+
+def test_engine_stats_mirror_store_counters(tmp_path):
+    # one worker: sibling resumes cross scheduling rounds, so they load
+    # through the store (in-round handoff would bypass it); a tiny disk
+    # capacity forces demotion traffic through the remote tier
+    store = _tiered(tmp_path, capacity=500)
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=1, store=store)
+    svc.submit(SPEC, GridTuner(_space().trials(120)))
+    stats = svc.close()
+    assert stats.ckpt_bytes_written == store.bytes_written > 0
+    assert stats.ckpt_delta_commits == store.delta_commits
+    assert stats.ckpt_tier_demotions == store.tier_demotions
+    assert (stats.ckpt_mem_hits + stats.ckpt_disk_hits
+            + stats.ckpt_remote_hits) > 0
+    assert stats.dedup_ratio == pytest.approx(store.dedup_ratio)
+
+
+def test_snapshot_restore_identity_with_tiered_store(tmp_path):
+    """Kill/restore over a *tiered* store: the restored session reuses
+    blobs wherever they live (local or demoted to remote) and replays the
+    identical logical run — stats equal modulo physical-store counters."""
+    db = SearchPlanDB()
+    svc = StudyService(db, SimulatedTrainer(), n_workers=4,
+                       store=_tiered(tmp_path))
+    svc.submit(SPEC, GridTuner(_space().trials(120)))
+    svc.run_until(90.0)
+    path = str(tmp_path / "session.pkl")
+    svc.snapshot(path)
+    reference = svc.close()
+
+    svc2 = StudyService.restore(SearchPlanDB(), path, SimulatedTrainer(),
+                                store=_tiered(tmp_path))
+    resumed = svc2.close()
+    assert det(resumed) == det(reference)
+    assert resumed.ckpt_misses == reference.ckpt_misses

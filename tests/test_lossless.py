@@ -241,3 +241,44 @@ def test_batched_siblings_equal_stepwise_bitwise(setup):
         for a, b in zip(jax.tree.leaves(merged_params),
                         jax.tree.leaves(solo_state["params"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_delta_encoded_store_is_bitwise_lossless(setup, tmp_path):
+    """Checkpoint plane v2: real training through a directory store with
+    delta-encoded boundary checkpoints (the dispatcher threads each
+    boundary's fork-point cid as the delta parent) must restore leaves
+    bit-identical to the per-step straight-through run — delta chains and
+    zero-copy reads included."""
+    fused = setup
+    stepwise = JaxTrainer(fused.task, fused.pipeline_factory,
+                          {k: np.asarray(v) for k, v in fused.eval_batch.items()},
+                          default_optimizer="momentum", fused=False,
+                          backend="cpu")
+    trials = [
+        Trial(HpConfig({"lr": MultiStep(0.05, [8], values=[0.05, v]),
+                        "bs": Constant(32)}), 16)
+        for v in (0.02, 0.01)
+    ]
+    from repro.train.checkpoint import CheckpointStore
+    store = CheckpointStore(str(tmp_path / "ckpts"))
+    db = SearchPlanDB()
+    study = Study.create(db, "resnet8", "synth", ("lr", "bs"))
+    eng = study.engine(fused, n_workers=2, store=store)
+    stats = eng.run([GridTuner(list(trials))])
+    # sibling forks off a shared prefix -> boundary commits are deltas
+    # (byte *reduction* is the bench's claim on partially-mutated states;
+    # SGD touches every chunk, so here only the encoding path is asserted)
+    assert store.delta_commits > 0
+    assert stats.ckpt_delta_commits == store.delta_commits
+
+    # cold reads straight off the blobs: drop every warm cache first
+    store._read_cache.clear()
+    plan = db.get(study.key)
+    for t in trials:
+        leaf = plan.nodes[plan.trial_paths[t.trial_id][-1]]
+        restored = store.get(leaf.ckpts[16])
+        solo_state, solo_metrics = straight_through(stepwise, t, 16)
+        assert leaf.metrics[16]["loss"] == solo_metrics["loss"]
+        assert_states_identical(
+            {k: restored[k] for k in ("step", "data", "params", "opt")},
+            solo_state)

@@ -19,10 +19,19 @@ SPEC = StudySpec("m", "d", ("lr", "bs"))
 def det(stats):
     """Deterministic view of EngineStats: ckpt_{save,load}_seconds are real
     wall-clock timers (perf_counter) and vary run to run even on the
-    simulator — everything else, by_study included, must replay exactly."""
+    simulator, and the checkpoint-plane v2 counters describe the *physical*
+    store — cache temperature, delta-vs-full mix and tier placement
+    legitimately differ between an uninterrupted run and a restored one
+    (a fresh store re-reads blobs it didn't write and re-bases delta
+    chains) — everything else, by_study included, must replay exactly."""
     import dataclasses
-    return dataclasses.replace(stats, ckpt_save_seconds=0.0,
-                               ckpt_load_seconds=0.0)
+    return dataclasses.replace(
+        stats, ckpt_save_seconds=0.0, ckpt_load_seconds=0.0,
+        ckpt_delta_bytes=0, ckpt_full_bytes=0, ckpt_logical_bytes=0,
+        ckpt_bytes_written=0, ckpt_delta_commits=0, ckpt_delta_rebases=0,
+        ckpt_mem_hits=0, ckpt_disk_hits=0, ckpt_remote_hits=0,
+        ckpt_store_misses=0, ckpt_tier_promotions=0, ckpt_tier_demotions=0,
+        ckpt_tmp_reclaimed=0)
 
 
 def space():
