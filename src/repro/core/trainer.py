@@ -176,7 +176,10 @@ class SimulatedTrainer(TrainerBackend):
             f"state at step {state['step']} cannot run stage starting {ctx.start}")
         vals = desc_values(ctx.desc, ctx.node_start, ctx.start, ctx.stop)
         static = desc_static(ctx.desc)
-        progress = state["progress"]
+        # float() detaches from the (read-only, cache-shared) restored leaf:
+        # += on a 0-d numpy view would mutate the checkpoint store's cached
+        # tree in place
+        progress = float(state["progress"])
         names = list(vals)
         for i, step in enumerate(range(ctx.start, ctx.stop)):
             hp = {k: vals[k][i] for k in names}

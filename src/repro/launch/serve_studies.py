@@ -109,6 +109,10 @@ def main() -> None:
     args = ap.parse_args()
     if args.remote_dir and not args.ckpt_dir:
         ap.error("--remote-dir requires --ckpt-dir")
+    if args.disk_capacity_mb and not args.remote_dir:
+        # the capacity only drives demotion to the remote tier; without one
+        # it would be silently ignored
+        ap.error("--disk-capacity-mb requires --remote-dir")
 
     def backend():
         return SimulatedTrainer(base_seconds_per_step=args.sec_per_step,

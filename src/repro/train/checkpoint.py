@@ -308,6 +308,7 @@ class CheckpointStore:
         self.store_misses = 0
         self.tier_promotions = 0
         self.tier_demotions = 0
+        self.tier_demotion_errors = 0
         self.remote_bytes_read = 0
         self.remote_bytes_written = 0
         self.tmp_reclaimed = 0
@@ -327,6 +328,7 @@ class CheckpointStore:
         self._disk_cids: "OrderedDict[str, int]" = OrderedDict()
         self._disk_bytes = 0
         self._remote_cids: set = set()
+        self._demoting: set = set()          # demotion uploads in flight
         # cid -> (delta depth, per-leaf chunk digests) for delta encoding
         self._blob_meta: Dict[str, Tuple[int, List[List[Tuple[str, int]]]]] = {}
         self._serializer_procs = int(serializer_procs)
@@ -438,62 +440,89 @@ class CheckpointStore:
     _IDLE_EXIT_SECONDS = 5.0   # idle writer threads retire themselves
 
     def _writer_loop(self) -> None:
-        while True:
-            with self._cv:
-                while not self._work:
-                    if not self._cv.wait(timeout=self._IDLE_EXIT_SECONDS):
-                        if not self._work:
-                            # idle too long: retire so the thread (and the
-                            # store it pins) can be reclaimed; put_async
-                            # spawns a fresh writer on the next deposit
-                            self._writer = None
-                            return
-                cid = self._work.popleft()
-                tree = self._pending.get(cid)
-                parent_cid = self._pending_parent.get(cid)
-            if tree is None:
-                continue  # superseded (a revoked re-put already committed)
-            try:
-                staged = (self._serialize_disk(cid, tree, parent_cid)
-                          if self.directory else None)
-            except BaseException as e:  # surfaced at the next flush()
+        cid = None
+        try:
+            while True:
+                cid = None
                 with self._cv:
-                    self._write_error = e
-                    self._pending.pop(cid, None)
-                    self._pending_parent.pop(cid, None)
-                    self._cancelled.discard(cid)
-                    self._cv.notify_all()
-                continue
-            with self._cv:
+                    while not self._work:
+                        if not self._cv.wait(timeout=self._IDLE_EXIT_SECONDS):
+                            if not self._work:
+                                # idle too long: retire so the thread (and
+                                # the store it pins) can be reclaimed;
+                                # put_async spawns a fresh writer on the
+                                # next deposit
+                                self._writer = None
+                                return
+                    cid = self._work.popleft()
+                    tree = self._pending.get(cid)
+                    parent_cid = self._pending_parent.get(cid)
+                if tree is None:
+                    continue  # superseded (a revoked re-put already committed)
                 try:
-                    if cid in self._cancelled:
-                        # evicted while serializing: the commit never
-                        # publishes — the final path is untouched, only
-                        # temps to discard
-                        self._cancelled.discard(cid)
-                        if staged is not None:
-                            os.remove(staged.tmp)
-                    else:
-                        # publish + state transition in ONE critical
-                        # section so __len__ never sees a cid as both
-                        # pending and on disk
-                        if staged is not None:
-                            self._publish_disk(cid, staged)
-                        elif cid in self._pending:
-                            self._mem[cid] = tree
+                    staged = (self._serialize_disk(cid, tree, parent_cid)
+                              if self.directory else None)
+                except BaseException as e:  # surfaced at the next flush()
+                    with self._cv:
+                        self._write_error = e
                         self._pending.pop(cid, None)
                         self._pending_parent.pop(cid, None)
-                except BaseException as e:
-                    # a publish/cancel failure must never strand the cid in
-                    # _pending/_cancelled: flush() would deadlock instead
-                    # of surfacing the error
-                    self._write_error = e
+                        self._cancelled.discard(cid)
+                        self._cv.notify_all()
+                    continue
+                with self._cv:
+                    try:
+                        if cid in self._cancelled:
+                            # evicted while serializing: the commit never
+                            # publishes — the final path is untouched, only
+                            # temps to discard
+                            self._cancelled.discard(cid)
+                            if staged is not None:
+                                os.remove(staged.tmp)
+                        else:
+                            # publish + state transition in ONE critical
+                            # section so __len__ never sees a cid as both
+                            # pending and on disk
+                            if staged is not None:
+                                self._publish_disk(cid, staged)
+                            elif cid in self._pending:
+                                self._mem[cid] = tree
+                            self._pending.pop(cid, None)
+                            self._pending_parent.pop(cid, None)
+                    except BaseException as e:
+                        # a publish/cancel failure must never strand the
+                        # cid in _pending/_cancelled: flush() would
+                        # deadlock instead of surfacing the error
+                        self._write_error = e
+                        self._pending.pop(cid, None)
+                        self._pending_parent.pop(cid, None)
+                        self._cancelled.discard(cid)
+                    finally:
+                        self._cv.notify_all()
+                self._demote_excess()
+        except BaseException as e:
+            # unexpected thread death (anything the per-item handlers above
+            # did not catch): surface at the next flush() and make sure the
+            # in-flight cid is not stranded in _pending/_cancelled
+            with self._cv:
+                self._write_error = e
+                if cid is not None:
                     self._pending.pop(cid, None)
                     self._pending_parent.pop(cid, None)
                     self._cancelled.discard(cid)
-                finally:
-                    self._cv.notify_all()
-            self._demote_excess()
+        finally:
+            # thread exit — expected (idle retire) or not — must never leave
+            # self._writer pointing at a dead thread: put_async would skip
+            # spawning a replacement and flush() would hang on the queue
+            with self._cv:
+                if self._writer is threading.current_thread():
+                    self._writer = None
+                    if self._work:
+                        self._writer = threading.Thread(
+                            target=self._writer_loop, name="ckpt-writer",
+                            daemon=True)
+                        self._writer.start()
+                self._cv.notify_all()
 
     def flush(self) -> None:
         """Block until every pending write has committed and every
@@ -520,6 +549,14 @@ class CheckpointStore:
 
     # --------------------------------------------------------------- get
     def get(self, cid: str) -> Any:
+        """The pytree committed under ``cid`` (any tier), or ``KeyError``.
+
+        Returned trees are SHARED — with the pending/in-memory map on the
+        memory paths and with the LRU read cache on the serialized paths —
+        so treat them as read-only (disk-restored leaves are enforced
+        read-only ``np.frombuffer`` views); copy before mutating.  Trainers
+        are functional (stages return new state), so nothing in the engine
+        mutates a restored tree in place."""
         self.gets += 1
         with self._cv:
             tree = self._pending.get(cid)
@@ -656,6 +693,12 @@ class CheckpointStore:
                 hdr = self._read_header(parent_cid)
             except (KeyError, OSError, ValueError):
                 return None
+            if hdr.get("chunk") != self.chunk_bytes:
+                # parent was encoded at a different chunk size (store
+                # reopened with another chunk_bytes): its digests index
+                # different byte ranges, so a digest match at chunk ci
+                # would splice the WRONG parent offset — degrade to full
+                return None
             meta = (hdr["depth"],
                     [[(h, n) for h, n, _ in leaf["c"]]
                      for leaf in hdr["leaves"]])
@@ -709,7 +752,8 @@ class CheckpointStore:
 
         header = json.dumps({
             "v": BLOB_FORMAT, "kind": kind, "parent": parent_cid,
-            "depth": depth, "tree_len": len(tree_blob),
+            "depth": depth, "chunk": self.chunk_bytes,
+            "tree_len": len(tree_blob),
             "leaves": leaf_metas}).encode("utf-8")
         path = self._path(cid)
         tmp = f"{path}.{threading.get_ident()}.tmp"
@@ -768,43 +812,77 @@ class CheckpointStore:
     def _demote_excess(self) -> None:
         """Move LRU disk blobs past ``disk_capacity_bytes`` to the remote
         tier (remote copy lands *before* the local file goes, so readers
-        always find the blob somewhere)."""
+        always find the blob somewhere).
+
+        Best-effort and concurrency-safe: a failing ``remote.put`` (or an
+        unreadable local file) is counted in ``tier_demotion_errors`` and
+        demotion stops for this pass — it must never propagate into the
+        writer thread, a synchronous put, or a promoting read.  Cids with
+        a demotion in flight are claimed in ``_demoting`` so two
+        concurrent passes never double-demote (and double-count) the same
+        blob, and an eviction landing mid-demotion wins: the freshly
+        uploaded remote copy is deleted instead of indexed, so evicted
+        checkpoints are never resurrected."""
         if self.remote is None or not self.disk_capacity_bytes:
             return
         while True:
             with self._cv:
-                if (self._disk_bytes <= self.disk_capacity_bytes
-                        or len(self._disk_cids) <= 1):
+                if self._disk_bytes <= self.disk_capacity_bytes:
                     return
-                cid, size = next(iter(self._disk_cids.items()))
+                cid = next((c for c in self._disk_cids
+                            if c not in self._demoting), None)
+                if cid is None or len(self._disk_cids) <= 1:
+                    return
+                self._demoting.add(cid)
             try:
-                with open(self._path(cid), "rb") as f:
-                    data = f.read()
-            except FileNotFoundError:  # pragma: no cover - evict race
+                try:
+                    with open(self._path(cid), "rb") as f:
+                        data = f.read()
+                except FileNotFoundError:  # pragma: no cover - evict race
+                    with self._cv:
+                        prev = self._disk_cids.pop(cid, None)
+                        if prev is not None:
+                            self._disk_bytes -= prev
+                    continue
+                except OSError:  # pragma: no cover - unreadable, not absent
+                    with self._cv:
+                        self.tier_demotion_errors += 1
+                    return
+                try:
+                    self.remote.put(cid, data)
+                except Exception:
+                    # remote outage: keep the blob local (capacity is
+                    # temporarily exceeded) and stop demoting this pass
+                    with self._cv:
+                        self.tier_demotion_errors += 1
+                    return
                 with self._cv:
-                    prev = self._disk_cids.pop(cid, None)
-                    if prev is not None:
-                        self._disk_bytes -= prev
-                continue
-            self.remote.put(cid, data)
-            with self._cv:
-                self._remote_cids.add(cid)
-                prev = self._disk_cids.pop(cid, None)
-                if prev is not None:
-                    self._disk_bytes -= prev
-                self.tier_demotions += 1
-                self.remote_bytes_written += len(data)
-            try:
-                os.remove(self._path(cid))
-            except FileNotFoundError:  # pragma: no cover - evict race
-                pass
+                    evicted = cid not in self._disk_cids
+                    if not evicted:
+                        self._remote_cids.add(cid)
+                        self._disk_bytes -= self._disk_cids.pop(cid)
+                        self.tier_demotions += 1
+                        self.remote_bytes_written += len(data)
+                if evicted:
+                    # evict() removed the cid while the upload was in
+                    # flight: honor the eviction — drop the remote copy
+                    try:
+                        self.remote.delete(cid)
+                    except KeyError:  # pragma: no cover - already gone
+                        pass
+                    continue
+                try:
+                    os.remove(self._path(cid))
+                except FileNotFoundError:  # pragma: no cover - evict race
+                    pass
+            finally:
+                with self._cv:
+                    self._demoting.discard(cid)
 
     def _fetch_blob(self, cid: str, count_hit: bool = False) -> bytearray:
         """Raw blob bytes from the disk tier, else the remote tier (with
-        promotion back to disk).  Returned as a *writable* buffer so
-        ``np.frombuffer`` leaves are mutable in place (trainers update
-        restored state without a defensive copy).  Raises ``KeyError``
-        when no tier holds the cid."""
+        promotion back to disk).  Raises ``KeyError`` when no tier holds
+        the cid."""
         with self._cv:
             on_disk = cid in self._disk_cids
         if on_disk:
@@ -942,5 +1020,10 @@ class CheckpointStore:
             dt = np.dtype(leaf["d"])
             arr = np.frombuffer(buf, dtype=dt,
                                 count=leaf["n"] // dt.itemsize)
+            # the reconstruction is shared via the read cache: read-only
+            # leaves keep in-place mutation from corrupting the cached copy
+            # every later get(cid) would serve (trainers are functional —
+            # they return new state — so nothing needs writable leaves)
+            arr.flags.writeable = False
             leaves.append(arr.reshape(leaf["s"]))
         return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -278,6 +278,140 @@ def test_legacy_format_blob_degrades_to_miss(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# tiering under faults: remote outages, evict/demote races, writer survival
+# ---------------------------------------------------------------------------
+
+
+class FailingPutRemote(FlakyRemote):
+    """Remote whose uploads fail (an outage) until ``healed`` is set."""
+
+    def __init__(self):
+        super().__init__()
+        self.healed = False
+
+    def put(self, key, data):
+        if not self.healed:
+            raise OSError("remote tier unavailable")
+        super().put(key, data)
+
+
+def test_failed_demotion_put_does_not_kill_writer(tmp_path):
+    """A remote.put outage during background demotion must not kill the
+    writer thread: pending writes keep committing, flush() returns (no
+    deadlock), the blob stays readable locally, and the outage is
+    counted — demotion resumes once the remote heals."""
+    remote = FailingPutRemote()
+    store = CheckpointStore(str(tmp_path), remote=remote,
+                            disk_capacity_bytes=1)
+    cids = [store.put_async("pk", i * 10, big_tree(i)) for i in range(3)]
+    store.flush()                      # would deadlock behind a dead writer
+    assert store.tier_demotion_errors >= 1
+    assert store.tier_demotions == 0
+    for i, cid in enumerate(cids):     # everything still served locally
+        store._read_cache.clear()
+        assert_tree_equal(store.get(cid), big_tree(i))
+    remote.healed = True
+    store._demote_excess()             # outage over: demotion resumes
+    assert store.tier_demotions >= 1
+
+
+def test_writer_thread_death_is_survivable(monkeypatch, tmp_path):
+    """An exception escaping the writer-loop body (here: an exploding
+    post-commit demotion hook) must clear the dead thread's slot —
+    flush() surfaces the error, and the next put_async gets a fresh
+    writer instead of queueing forever behind a corpse."""
+    store = CheckpointStore(str(tmp_path))
+    monkeypatch.setattr(
+        store, "_demote_excess",
+        lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    store.put_async("pk", 10, big_tree(0))
+    writer = store._writer             # None if it already died and cleared
+    if writer is not None:
+        writer.join(timeout=10)
+        assert not writer.is_alive()   # the hook killed the thread
+    with pytest.raises(RuntimeError):
+        store.flush()
+    monkeypatch.setattr(store, "_demote_excess", lambda: None)
+    cid = store.put_async("pk", 20, big_tree(1))
+    store.flush()                      # a replacement writer committed it
+    store._read_cache.clear()
+    assert_tree_equal(store.get(cid), big_tree(1))
+
+
+def test_evict_during_demotion_does_not_resurrect(tmp_path):
+    """evict() landing while the demotion upload is in flight wins: the
+    freshly uploaded remote copy is deleted instead of indexed, so the
+    evicted checkpoint never reappears in committed_ids()/get()."""
+    uploading = threading.Event()
+    release = threading.Event()
+
+    class StallingRemote(FlakyRemote):
+        def put(self, key, data):
+            uploading.set()
+            assert release.wait(timeout=10)
+            super().put(key, data)
+
+    remote = StallingRemote()
+    store = CheckpointStore(str(tmp_path), remote=remote,
+                            disk_capacity_bytes=1)
+    cid0 = store.put("pk", 10, big_tree(0))
+    # the second commit pushes past capacity and demotes cid0 (the LRU);
+    # run it on a helper thread so the eviction can land mid-upload
+    t = threading.Thread(target=store.put, args=("pk", 20, big_tree(1)))
+    t.start()
+    assert uploading.wait(timeout=10)          # upload in flight
+    assert store.evict(cid0)                   # eviction races it
+    release.set()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert not remote.contains(cid0)           # upload was rolled back
+    assert cid0 not in store.committed_ids()
+    with pytest.raises(KeyError):
+        store.get(cid0)
+    assert store.tier_demotions == 0           # rolled back, not counted
+
+
+# ---------------------------------------------------------------------------
+# read-path sharing and re-chunked reopen
+# ---------------------------------------------------------------------------
+
+
+def test_restored_trees_are_read_only_and_cache_safe(tmp_path):
+    """get() shares one reconstruction through the read cache, so
+    disk-restored leaves are enforced read-only — in-place mutation
+    raises instead of silently corrupting what the next get() serves."""
+    store = CheckpointStore(str(tmp_path))
+    base = big_tree(0)
+    cid = store.put("pk", 10, base)
+    store._read_cache.clear()
+    restored = store.get(cid)
+    assert restored["w"].flags.writeable is False
+    with pytest.raises(ValueError):
+        restored["w"][:10] = 0.0
+    assert_tree_equal(store.get(cid), base)    # cached copy unharmed
+
+
+def test_chunk_size_change_degrades_delta_to_full(tmp_path):
+    """A store reopened with a different chunk_bytes must not delta
+    against blobs chunked at the old size (same digest index, different
+    byte range — splicing would corrupt silently): the child falls back
+    to a full commit and restores bit-identically."""
+    base = big_tree(0)
+    store = CheckpointStore(str(tmp_path), chunk_bytes=1 << 16)
+    cid0 = store.put("pk", 10, base)
+    assert store._read_header(cid0)["chunk"] == 1 << 16
+
+    reopened = CheckpointStore(str(tmp_path), chunk_bytes=1 << 14)
+    child = big_tree(1, mutate_from=base)
+    cid1 = reopened.put("pk", 20, child, parent_cid=cid0)
+    assert reopened.delta_fallbacks == 1
+    assert reopened.full_commits == 1 and reopened.delta_commits == 0
+    reopened._read_cache.clear()
+    assert_tree_equal(reopened.get(cid1), child)
+    assert_tree_equal(reopened.get(cid0), base)
+
+
+# ---------------------------------------------------------------------------
 # process-pool serializer
 # ---------------------------------------------------------------------------
 
