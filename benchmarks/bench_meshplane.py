@@ -1,0 +1,231 @@
+"""Mesh-plane benchmark: sibling-group width x worker-mesh width sweep.
+
+Distribution plane v2 gives a worker a device *set* (``WorkerMesh``): a
+stage's carry shards over the mesh (fsdp over the ``data`` axis) while a
+sibling-chain group vmaps across trials within it — two orthogonal
+parallelism axes.  This bench drives the full engine (scheduler,
+dispatcher, checkpoint plane) over a small reference task on every fleet
+shape and asserts the plane's two claims *in-bench*:
+
+* **lossless**: leaf checkpoints of every mesh fleet are bit-identical
+  to the thread-worker fleet (same forest, same schedules);
+* **zero store round-trips on same-host handoff**: resumes between
+  stages on a mesh fleet are served device-to-device (``d2d_handoffs``
+  counts them) and the store's read-tier counters stay at zero — only
+  durability writes touch it.  The thread fleet, by contrast, pays a
+  store read per resume (``mem_hits``).
+
+Runs in a subprocess with ``--xla_force_host_platform_device_count=4``
+(the flag must precede the jax import, and the parent process — the
+benchmark harness — has usually imported jax already).  Rows land in
+``BENCH_meshplane.json`` via ``benchmarks/run.py`` and are gated by
+``check_meshplane_trend.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+WIDTHS = (2, 4)          # sibling-group sizes (trials vmapped per group)
+MESHES = (0, 1, 2, 4)    # devices per worker (0 = thread fleet)
+STEPS = 24               # per trial; siblings fork at STEPS // 2
+_MARK = "BENCH_MESHPLANE_JSON="
+
+
+# ---------------------------------------------------------------------------
+# child: the measured sweep (runs under forced host devices)
+# ---------------------------------------------------------------------------
+
+
+def _measure():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import SearchPlanDB, Study
+    from repro.core.hpseq import HpConfig, MultiStep
+    from repro.core.trial import Trial
+    from repro.core.tuners import GridTuner
+    from repro.data.pipeline import DataPipeline
+    from repro.dist.meshes import WorkerMesh
+    from repro.train.jax_trainer import JaxTrainer
+
+    assert jax.device_count() >= max(MESHES), (
+        f"need {max(MESHES)} host devices, have {jax.device_count()}")
+
+    class BenchTask:
+        """Linear softmax with mesh-divisible dims (32 x 8: every mesh
+        width in the sweep shards the weight's leading dim)."""
+
+        def init(self, rng):
+            k1, _ = jax.random.split(rng)
+            return {"w": 0.1 * jax.random.normal(k1, (32, 8)),
+                    "b": jnp.zeros((8,))}
+
+        def loss(self, params, batch):
+            logits = batch["x"] @ params["w"] + params["b"]
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(
+                logp, batch["y"][:, None], axis=1).mean()
+            return nll, {"acc": (jnp.argmax(logits, -1)
+                                 == batch["y"]).mean()}
+
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (256, 32)).astype(np.float32),
+            "y": rng.integers(0, 8, 256).astype(np.int32)}
+    eval_data = {"x": rng.normal(0, 1, (64, 32)).astype(np.float32),
+                 "y": rng.integers(0, 8, 64).astype(np.int32)}
+
+    def make_backend():
+        return JaxTrainer(BenchTask(),
+                          lambda: DataPipeline(data, batch_size=16, seed=3),
+                          eval_data, default_optimizer="momentum",
+                          backend="cpu", vectorize_groups=True)
+
+    def trials(width):
+        fork = STEPS // 2
+        return [Trial(HpConfig({"lr": MultiStep(
+            0.1, [fork], values=[0.1, 0.05 / (i + 1)])}), STEPS)
+            for i in range(width)]
+
+    def run_fleet(devices, width, backend):
+        """One engine run; a single worker so the fork checkpoint lands a
+        round before the tails — the sibling group then forms and resumes
+        through the d2d path (mesh fleets) or the store (threads)."""
+        mesh = (None if devices == 0
+                else WorkerMesh.build(list(range(devices))))
+        db = SearchPlanDB()
+        study = Study.create(db, "m", "d", ("lr",))
+        # the chain cap stops round 1 at the fork, so round 2 resumes the
+        # FULL sibling set as one vmapped group (and the resume itself is
+        # the handoff under measurement)
+        eng = study.engine(backend, n_workers=1, batch_siblings=True,
+                           max_steps_per_chain=STEPS // 2,
+                           worker_meshes=None if mesh is None else [mesh])
+        t0 = time.perf_counter()
+        stats = eng.run([GridTuner(trials(width))])
+        wall = time.perf_counter() - t0
+        return db.get(study.key), eng, stats, wall
+
+    def leaf_states(plan, eng, width):
+        out = []
+        for t in trials(width):
+            leaf = plan.trial_paths[t.trial_id][-1]
+            out.append(eng.store.get(plan.nodes[leaf].ckpts[STEPS]))
+        return out
+
+    def bitwise(a, b):
+        for sa, sb in zip(a, b):
+            for x, y in zip(jax.tree.leaves(sa["params"]),
+                            jax.tree.leaves(sb["params"])):
+                if np.asarray(x).tobytes() != np.asarray(y).tobytes():
+                    return False
+        return True
+
+    rows = []
+    for width in WIDTHS:
+        ref_states = None
+        ref_rate = None
+        for devices in MESHES:
+            backend = make_backend()
+            run_fleet(devices, width, backend)            # compile warmup
+            # best-of-3: single runs are ~10ms and scheduler-noise bound
+            plan, eng, stats, wall = min(
+                (run_fleet(devices, width, backend) for _ in range(3)),
+                key=lambda r: r[3])
+            states = leaf_states(plan, eng, width)
+            reads = (stats.ckpt_mem_hits + stats.ckpt_disk_hits
+                     + stats.ckpt_remote_hits)
+            row = {
+                "fleet": f"mesh{devices}" if devices else "threads",
+                "group_width": width,
+                "devices": max(devices, 1),
+                "steps_run": stats.steps_run,
+                "wall_s": round(wall, 4),
+                "steps_per_s": round(stats.steps_run / wall, 1),
+                "batched_groups": stats.batched_groups,
+                "mesh_placements": stats.mesh_placements,
+                "placement_rejections": stats.placement_rejections,
+                "ckpt_loads": stats.ckpt_loads,
+                "d2d_handoffs": stats.d2d_handoffs,
+                "store_read_hits": reads,
+            }
+            if devices == 0:
+                ref_states, ref_rate = states, row["steps_per_s"]
+                row["bitwise_identical"] = True
+                # threads pay the store for every resume
+                assert stats.d2d_handoffs == 0
+                assert reads > 0, "thread fleet never read the store?"
+            else:
+                row["bitwise_identical"] = bitwise(states, ref_states)
+                row["rate_vs_threads"] = round(
+                    row["steps_per_s"] / ref_rate, 3)
+                # the plane's core claims, asserted where they're measured
+                assert row["bitwise_identical"], (
+                    f"mesh{devices} x{width}: sharded leaves diverged "
+                    "from the thread fleet")
+                assert stats.mesh_placements > 0
+                assert stats.d2d_handoffs > 0, (
+                    f"mesh{devices} x{width}: no d2d handoff happened")
+                assert reads == 0, (
+                    f"mesh{devices} x{width}: {reads} store reads — "
+                    "same-host handoff must bypass the store entirely")
+            assert stats.batched_groups > 0, "sibling group never formed"
+            rows.append(row)
+        # the forest and schedule are fleet-invariant
+        assert len({r["steps_run"] for r in rows
+                    if r["group_width"] == width}) == 1
+    return rows
+
+
+def _child():
+    print(_MARK + json.dumps(_measure()))
+
+
+# ---------------------------------------------------------------------------
+# parent: re-exec under forced host devices
+# ---------------------------------------------------------------------------
+
+
+def main(csv: bool = True):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{max(MESHES)} " + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.bench_meshplane import _child; _child()"],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-4000:])
+        raise SystemExit("bench_meshplane child failed")
+    line = next(l for l in proc.stdout.splitlines() if l.startswith(_MARK))
+    rows = json.loads(line[len(_MARK):])
+    if csv:
+        keys = ["fleet", "group_width", "devices", "steps_run", "wall_s",
+                "steps_per_s", "rate_vs_threads", "batched_groups",
+                "mesh_placements", "ckpt_loads", "d2d_handoffs",
+                "store_read_hits", "bitwise_identical"]
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r.get(k, "")) for k in keys))
+    return rows
+
+
+def dump_json(rows, path: str = "BENCH_meshplane.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "meshplane", "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
+
+
+if __name__ == "__main__":
+    dump_json(main())

@@ -1,0 +1,108 @@
+"""CI trend gate for the mesh plane (mirrors check_ckptplane_trend).
+
+Compares the current ``BENCH_meshplane.json`` against the committed
+baseline (``benchmarks/baseline_meshplane.json``) and fails when:
+
+* any mesh row lost leaf bit-identity with the thread fleet
+  (``bitwise_identical`` false) — sharded execution that drifts is
+  corruption, not a perf trade;
+* a mesh row stopped handing off device-to-device (``d2d_handoffs`` 0)
+  or touched the store's read tiers (``store_read_hits`` > 0) — the
+  same-host boundary handoff must perform zero store round-trips;
+* ``steps_run`` differs across fleets within a group width — the stage
+  forest and schedule are fleet-invariant by construction;
+* a width-1 mesh fleet falls below ``MESH1_RATE_FLOOR`` of the thread
+  fleet's throughput — width-1 meshes are pure bookkeeping and must stay
+  near parity;
+* a sharded fleet's throughput *relative to the thread fleet on the same
+  machine* regresses more than ``RATE_THRESHOLD`` vs the baseline's
+  relative throughput (absolute rates are machine-speed; the ratio
+  tracks the plane's own overhead).
+
+Usage: ``python benchmarks/check_meshplane_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+MESH1_RATE_FLOOR = 0.5   # min mesh1 throughput as a fraction of threads
+RATE_THRESHOLD = 3.0     # max relative-throughput regression vs baseline
+
+
+def _row(rows, fleet: str, width: int) -> dict:
+    for r in rows:
+        if r["fleet"] == fleet and r["group_width"] == width:
+            return r
+    raise SystemExit(f"benchmark row ({fleet}, width {width}) missing")
+
+
+def main(current_path: str = "BENCH_meshplane.json",
+         baseline_path: str = "benchmarks/baseline_meshplane.json") -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    widths = sorted({r["group_width"] for r in cur})
+    mesh_fleets = sorted({r["fleet"] for r in cur if r["fleet"] != "threads"})
+
+    # ---- losslessness + handoff invariants: non-negotiable on every row
+    for r in cur:
+        where = f"{r['fleet']} x{r['group_width']}"
+        if not r.get("bitwise_identical"):
+            raise SystemExit(
+                f"{where}: leaves are NOT bit-identical to the thread "
+                "fleet — the sharded path is corrupting")
+        if r["fleet"] == "threads":
+            continue
+        if r["d2d_handoffs"] <= 0:
+            raise SystemExit(f"{where}: no device-to-device handoff — "
+                             "resumes went through the store")
+        if r["store_read_hits"] > 0:
+            raise SystemExit(
+                f"{where}: {r['store_read_hits']} store reads — same-host "
+                "handoff must perform zero store round-trips")
+    print("bit-identity + zero-read d2d handoff OK on all rows")
+
+    # ---- the forest and schedule are fleet-invariant
+    for w in widths:
+        steps = {r["steps_run"] for r in cur if r["group_width"] == w}
+        if len(steps) != 1:
+            raise SystemExit(
+                f"width {w}: steps_run differs across fleets ({steps}) — "
+                "mesh placement changed the schedule")
+    print("fleet-invariant schedules OK")
+
+    # ---- width-1 meshes are bookkeeping: near-parity with threads
+    for w in widths:
+        rate = _row(cur, "mesh1", w)["rate_vs_threads"]
+        print(f"mesh1 x{w}: {rate}x thread throughput "
+              f"(floor {MESH1_RATE_FLOOR})")
+        if rate < MESH1_RATE_FLOOR:
+            raise SystemExit(
+                f"mesh1 x{w}: width-1 mesh fleet runs at {rate}x the "
+                f"thread fleet (floor {MESH1_RATE_FLOOR}) — the default "
+                "path is paying for the mesh plane")
+
+    # ---- sharded overhead, tracked relative to threads on each machine
+    for fleet in mesh_fleets:
+        for w in widths:
+            cur_rel = _row(cur, fleet, w)["rate_vs_threads"]
+            base_rel = _row(base, fleet, w)["rate_vs_threads"]
+            ratio = base_rel / max(cur_rel, 1e-9)
+            print(f"{fleet} x{w}: relative throughput {cur_rel} vs "
+                  f"baseline {base_rel} -> regression x{ratio:.2f} "
+                  f"(limit {RATE_THRESHOLD:.1f})")
+            if ratio > RATE_THRESHOLD:
+                raise SystemExit(
+                    f"{fleet} x{w}: relative throughput regressed "
+                    f"{ratio:.2f}x vs the committed baseline "
+                    f"(limit {RATE_THRESHOLD:.1f}x)")
+    print("trend OK")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    main(*(argv[:2]))

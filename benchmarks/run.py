@@ -6,10 +6,11 @@ control-plane rows land in ``BENCH_stagetree.json`` (gated against the
 committed baseline by ``check_stagetree_trend.py``), the data-plane rows
 in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``), the
 Pallas kernel rows in ``BENCH_kernels.json``, the checkpoint-plane rows
-in ``BENCH_ckptplane.json`` (gated by ``check_ckptplane_trend.py``) and
-the multi-study upfront/staggered rows in ``BENCH_multistudy.json``, so
-the perf trajectory is tracked across PRs (CI uploads all five as
-artifacts).
+in ``BENCH_ckptplane.json`` (gated by ``check_ckptplane_trend.py``), the
+mesh-plane fleet sweep in ``BENCH_meshplane.json`` (gated by
+``check_meshplane_trend.py``) and the multi-study upfront/staggered rows
+in ``BENCH_multistudy.json``, so the perf trajectory is tracked across
+PRs (CI uploads all six as artifacts).
 """
 
 from __future__ import annotations
@@ -26,8 +27,9 @@ def dump_stagetree_json(rows, path: str = "BENCH_stagetree.json") -> None:
 
 def main() -> None:
     from benchmarks import (bench_ckptplane, bench_dataplane, bench_kernels,
-                            bench_merge_rate, bench_multi_study,
-                            bench_single_study, bench_stagetree)
+                            bench_merge_rate, bench_meshplane,
+                            bench_multi_study, bench_single_study,
+                            bench_stagetree)
 
     sections = [
         ("merge-rate table (paper Table 1)", bench_merge_rate),
@@ -38,6 +40,8 @@ def main() -> None:
         ("kernel allclose + timing", bench_kernels),
         ("checkpoint plane: full vs delta-encoded commits on a "
          "sibling-heavy forest", bench_ckptplane),
+        ("mesh plane: group-width x mesh-width fleet sweep + d2d handoff",
+         bench_meshplane),
         ("single-study: trial vs stage (Figure 12 / Table 5)",
          bench_single_study),
         ("multi-study S1/S2/S4/S8 + staggered service (Figures 13-14)",

@@ -35,11 +35,27 @@ has dropped (external eviction) does not raise — the dispatcher counts a
 ``ckpt_miss``, tells the plan to forget the stale entry, refunds the
 scheduler, and re-runs the round: Algorithm 1 re-derives the request from
 whatever remains (an earlier checkpoint, an ancestor, or a fresh model).
+
+Mesh workers (distribution plane v2): a worker may own a device set
+(:class:`~repro.dist.meshes.WorkerMesh`).  Placement then goes through
+:meth:`Dispatcher._place`: workers whose mesh the backend rejects for the
+work (``backend.mesh_compatible`` — the PR 3 divisibility gate) are
+skipped (``placement_rejections``), and among the compatible ones the
+scheduling policy's ``placement_hint`` picks narrow ("wide": sibling
+groups batch trials) or wide ("deep": solo chains shard the model) — the
+two orthogonal parallelism axes traded per work unit.  Boundary states of
+finished chains additionally populate a small host-local **d2d cache**:
+a resume whose producer ran on the same host is served by
+``backend.device_transfer`` (``d2d_handoffs``; no store round-trip, same
+virtual-clock/accounting costs), falling back to the tiered store across
+hosts or after eviction — content addressing makes the cache trivially
+coherent.
 """
 
 from __future__ import annotations
 
 import time as _time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -49,6 +65,7 @@ from repro.core.stagetree import (Stage, StageTreeBuilder,
                                   sibling_chain_groups, sibling_groups)
 from repro.core.engine.events import EventLoop
 from repro.core.trainer import StageContext, TrainerBackend
+from repro.dist.meshes import WorkerMesh
 from repro.train.checkpoint import CheckpointStore
 
 __all__ = ["Worker", "Dispatcher"]
@@ -59,6 +76,16 @@ class Worker:
     wid: int
     busy_until: float = 0.0
     idle: bool = True
+    #: device set this worker owns (None = classic 1-slot thread worker)
+    mesh: Optional[WorkerMesh] = None
+
+    @property
+    def host(self) -> str:
+        return self.mesh.host if self.mesh is not None else "host0"
+
+    @property
+    def devices(self) -> int:
+        return self.mesh.n_devices if self.mesh is not None else 1
 
 
 class Dispatcher:
@@ -86,6 +113,13 @@ class Dispatcher:
         # this baseline, so a restored session (fresh store, zero counters)
         # accumulates onto its snapshot totals instead of clobbering them
         self._store_base = self._seed_store_base()
+        # d2d handoff cache: boundary cid -> (state, producing host).  Only
+        # active on mesh fleets so classic thread-worker runs keep their
+        # store-counter behavior bit-for-bit; transient by design (not
+        # snapshotted — a restored session falls back to the store).
+        self._d2d_enabled = any(w.mesh is not None for w in workers)
+        self._d2d: "OrderedDict[str, Tuple[Any, str]]" = OrderedDict()
+        self._d2d_cap = 16
 
     # ------------------------------------------------------------ scheduling
     def assign(self) -> None:
@@ -186,14 +220,41 @@ class Dispatcher:
             for group in groups:
                 if not idle:
                     break
-                ran, miss = self._execute_group(group, idle[0], produced,
+                # policy-routed placement (not a hardwired idle[0]): the
+                # mesh gate filters, the placement hint picks
+                worker = self._place(idle, group)
+                if worker is None:
+                    # no compatible idle worker — the stages were never
+                    # claimed and fall through to the chain pass / a later
+                    # round
+                    continue
+                ran, miss = self._execute_group(group, worker, produced,
                                                 taken)
                 missed |= miss
                 if ran:
-                    idle.pop(0)
+                    idle.remove(worker)
 
-        paths = self.scheduler.assign(self.plan, tree, len(idle), taken=taken)
-        for path, worker in zip(paths, idle):
+        # chain pass over an explicit in-round pool: a deferred chain's
+        # worker returns to the pool and is offered another path (it used
+        # to strand idle for the rest of the round), and a refill asks the
+        # scheduler for more chains when deferrals freed capacity
+        pool = list(idle)
+        pending: List[List[Stage]] = []
+        exhausted = False
+
+        def refill() -> None:
+            nonlocal exhausted
+            if exhausted or not pool:
+                return
+            got = self.scheduler.assign(self.plan, tree, len(pool),
+                                        taken=taken)
+            if len(got) < len(pool):
+                exhausted = True
+            pending.extend(got)
+
+        refill()
+        while pool and pending:
+            path = pending.pop(0)
             if self.max_steps_per_chain:
                 full = path
                 path = self._truncate(full)
@@ -201,8 +262,58 @@ class Dispatcher:
                     # refund the cut tail: it reschedules in a later round
                     self.scheduler.on_stages_unassigned(
                         self.plan, full[len(path):])
-            missed |= self._execute_chain(path, worker, produced)
+            worker = self._place(pool, [path])
+            if worker is None:
+                # every compatible worker is busy — refund; the stages stay
+                # taken this round and re-extract in a later one
+                self.scheduler.on_stages_unassigned(self.plan, path)
+            else:
+                pool.remove(worker)
+                status = self._execute_chain(path, worker, produced)
+                if status == "miss":
+                    missed = True
+                elif status == "deferred":
+                    pool.append(worker)
+            if not pending:
+                refill()
         return missed and any(w.idle for w in self.workers)
+
+    # -------------------------------------------------------------- placement
+    def _place(self, candidates: List[Worker],
+               chains: List[List[Stage]]) -> Optional[Worker]:
+        """Pick a worker for one work unit (a chain, or a sibling-chain
+        group) from ``candidates``: drop mesh workers the backend rejects
+        for this work (``placement_rejections``), then let the scheduling
+        policy's placement hint trade batch width against shard width.
+        Ties resolve to the earliest candidate, so a homogeneous fleet
+        places exactly like the classic first-idle dispatcher.
+
+        Rejection redirects work when an alternative exists; when EVERY
+        candidate is rejected the narrowest one hosts the work anyway
+        (backends run replicated on a mesh they cannot shard over) — an
+        all-incompatible fleet must degrade, not starve the plan."""
+        ctxs = [self._ctx_for(st) for chain in chains for st in chain]
+        eligible = []
+        for w in candidates:
+            if w.mesh is not None and not self.backend.mesh_compatible(
+                    w.mesh, ctxs):
+                self.stats.placement_rejections += 1
+                continue
+            eligible.append(w)
+        if not eligible:
+            return min(candidates, key=lambda w: w.devices)
+        hint = self.scheduler.placement_hint(self.plan, chains, eligible)
+        if hint == "wide":
+            return min(eligible, key=lambda w: w.devices)
+        if hint == "deep":
+            return max(eligible, key=lambda w: w.devices)
+        return eligible[0]
+
+    def _worker_gpus(self, worker: Worker) -> int:
+        """Accounting width of a worker: its mesh size, or the engine-wide
+        ``gpus_per_worker`` for classic thread workers."""
+        return (worker.mesh.n_devices if worker.mesh is not None
+                else self.gpus_per_worker)
 
     def _truncate(self, path: List[Stage]) -> List[Stage]:
         out, steps = [], 0
@@ -214,26 +325,53 @@ class Dispatcher:
         return out
 
     # ---------------------------------------------------------- resume input
-    def _load_resume(self, nid: str, step: int) -> Optional[Tuple[Any, str]]:
+    def _load_resume(self, nid: str, step: int,
+                     worker: Optional[Worker] = None
+                     ) -> Optional[Tuple[Any, str]]:
         """(state, cid) of checkpoint (node, step), or None after degrading
         a vanished checkpoint to recompute: count the miss and make the
         plan forget the stale entry so the next round re-derives the
         request.  A checkpoint the plan no longer lists (already forgotten
         earlier this round) is not a fresh miss — one eviction counts once.
         The cid rides along as the fork-point parent for delta-encoding
-        the chain's first boundary checkpoint."""
+        the chain's first boundary checkpoint.
+
+        On mesh fleets, a boundary state produced on ``worker``'s host is
+        served device-to-device (``backend.device_transfer``) with no
+        store round-trip; the virtual-clock and ``ckpt_loads`` accounting
+        is the caller's and stays identical either way."""
         cid = self.plan.node(nid).ckpts.get(step)
-        if cid is not None:
-            t0 = _time.perf_counter()
-            try:
-                return self.store.get(cid), cid
-            except KeyError:
-                pass
-            finally:
-                self.stats.ckpt_load_seconds += _time.perf_counter() - t0
-            self.stats.ckpt_misses += 1
-            self.plan.forget_ckpt(nid, step)
+        if cid is None:
+            return None
+        if self._d2d_enabled and worker is not None:
+            entry = self._d2d.get(cid)
+            if entry is not None and entry[1] == worker.host:
+                moved = self.backend.device_transfer(entry[0], worker.mesh)
+                if moved is not None:
+                    self._d2d.move_to_end(cid)
+                    self.stats.d2d_handoffs += 1
+                    return moved, cid
+        t0 = _time.perf_counter()
+        try:
+            return self.store.get(cid), cid
+        except KeyError:
+            pass
+        finally:
+            self.stats.ckpt_load_seconds += _time.perf_counter() - t0
+        self.stats.ckpt_misses += 1
+        self.plan.forget_ckpt(nid, step)
         return None
+
+    def _d2d_put(self, cid: str, state: Any, worker: Worker) -> None:
+        """Retain a boundary state for host-local handoff (LRU-bounded;
+        content addressing keeps a stale entry harmless — the plan simply
+        stops asking for its cid)."""
+        if not self._d2d_enabled:
+            return
+        self._d2d[cid] = (state, worker.host)
+        self._d2d.move_to_end(cid)
+        while len(self._d2d) > self._d2d_cap:
+            self._d2d.popitem(last=False)
 
     def _put_boundary(self, path_key: str, stop: int, state: Any,
                       parent_cid: Optional[str] = None) -> str:
@@ -254,20 +392,21 @@ class Dispatcher:
         return cid
 
     # ------------------------------------------------------ study accounting
-    def _credit_stage(self, st: Stage, dur: float) -> None:
+    def _credit_stage(self, st: Stage, dur: float, gpus: int) -> None:
         """Per-study breakdown (``EngineStats.by_study``): split the
         stage's execution seconds evenly across the studies it serves
         (reuse is free capacity — each sharing study pays 1/k), but count
         ``steps_run``/``stages_run`` in full per serving study, so the
         per-study step sums exceed the physical total exactly when stages
-        are shared.  Work with no study attribution (direct
-        ``plan.submit`` without ``study=``) is left out of the breakdown."""
+        are shared.  ``gpus`` is the executing worker's device width.
+        Work with no study attribution (direct ``plan.submit`` without
+        ``study=``) is left out of the breakdown."""
         studies = set()
         for tid in self.plan.node(st.node_id).trials:
             studies |= self.plan.studies_of_trial(tid)
         if not studies:
             return
-        share = dur * self.gpus_per_worker / len(studies)
+        share = dur * gpus / len(studies)
         for s in sorted(studies):
             ss = self.stats.study(s)
             ss.gpu_seconds += share
@@ -299,25 +438,29 @@ class Dispatcher:
     # ------------------------------------------------------- chain execution
     def _execute_chain(self, path: List[Stage], worker: Worker,
                        produced: Dict[str, Tuple[Any, float,
-                                                 Optional[str]]]) -> bool:
-        """Execute one chain; True when a checkpoint miss deferred it."""
+                                                 Optional[str]]]) -> str:
+        """Execute one chain on ``worker``.  Returns ``"ran"``, ``"miss"``
+        (checkpoint vanished — the caller retries the round) or
+        ``"deferred"`` (in-round input truncated away — the caller returns
+        the worker to the round's pool)."""
         head = path[0]
         t = max(self.events.time, worker.busy_until)
         load_s, save_s = self.backend.overheads()
+        gpus = self._worker_gpus(worker)
 
         # ------- input state (parent_cid = the fork-point checkpoint the
         # chain's first boundary delta-encodes against)
         if head.resume is not None:
             nid, step = head.resume
-            loaded = self._load_resume(nid, step)
+            loaded = self._load_resume(nid, step, worker)
             if loaded is None:
                 # resume checkpoint externally dropped — leave the requests
                 # pending; the retried round re-derives them from the plan
                 self.scheduler.on_stages_unassigned(self.plan, path)
-                return True
+                return "miss"
             state, parent_cid = loaded
             t += load_s
-            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.gpu_seconds += load_s * gpus
             self.stats.ckpt_loads += 1
         elif head.parent is not None:
             if head.parent not in produced:
@@ -326,21 +469,24 @@ class Dispatcher:
                 worker.idle = True
                 self.stats.chains_deferred += 1
                 self.scheduler.on_stages_unassigned(self.plan, path)
-                return False
+                return "deferred"
             # produced by another chain in this same round
             state, parent_done, parent_cid = produced[head.parent]
             t = max(t, parent_done) + load_s
-            self.stats.gpu_seconds += load_s * self.gpus_per_worker
+            self.stats.gpu_seconds += load_s * gpus
             self.stats.ckpt_loads += 1
         else:
             state = self.backend.init_state()
             parent_cid = None
 
         worker.idle = False
+        self.backend.set_mesh(worker.mesh)
+        if worker.mesh is not None:
+            self.stats.mesh_placements += 1
         if self.chain_fusion:
             self._run_chain_fused(path, worker, state, t, produced,
                                   parent_cid)
-            return False
+            return "ran"
 
         for st in path:
             ctx = self._ctx_for(st)
@@ -360,10 +506,10 @@ class Dispatcher:
                 self.stats.evals_run += 1
             dur += save_s  # checkpoint at every stage boundary
             t += dur
-            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.gpu_seconds += dur * gpus
             self.stats.stages_run += 1
             self.stats.steps_run += st.steps
-            self._credit_stage(st, dur)
+            self._credit_stage(st, dur, gpus)
 
             if st.steps > 0:
                 self.plan.record_profile(
@@ -371,13 +517,14 @@ class Dispatcher:
             cid = self._put_boundary(ctx.path_key, st.stop, state,
                                      parent_cid=parent_cid)
             parent_cid = cid   # next boundary deltas against this one
+            self._d2d_put(cid, state, worker)
             produced[st.stage_id] = (state, t, cid)
             self.events.push(t, "stage", {
                 "node_id": st.node_id, "stop": st.stop, "cid": cid,
                 "metrics": metrics, "worker": worker.wid,
                 "last": st is path[-1]})
         worker.busy_until = t
-        return False
+        return "ran"
 
     # ------------------------------------------------- fused chain execution
     def _run_chain_fused(self, path: List[Stage], worker: Worker,
@@ -390,6 +537,7 @@ class Dispatcher:
         checkpoints — with per-stage events, profiles and virtual durations
         identical in structure to the unfused loop."""
         _, save_s = self.backend.overheads()
+        gpus = self._worker_gpus(worker)
         ctxs = [self._ctx_for(st) for st in path]
         self.plan.mark_running([Request(st.node_id, st.stop) for st in path])
 
@@ -416,6 +564,7 @@ class Dispatcher:
         for st, ctx, s in zip(path, ctxs, bstates):
             cid = self._put_boundary(ctx.path_key, st.stop, s,
                                      parent_cid=parent_cid)
+            self._d2d_put(cid, s, worker)
             cids.append(cid)
             parent_cid = cid
         metrics_l = [self.backend.evaluate(s, ctx) if st.report else None
@@ -437,10 +586,10 @@ class Dispatcher:
                 self.stats.evals_run += 1
             dur += save_s  # checkpoint at every stage boundary
             t += dur
-            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.gpu_seconds += dur * gpus
             self.stats.stages_run += 1
             self.stats.steps_run += st.steps
-            self._credit_stage(st, dur)
+            self._credit_stage(st, dur, gpus)
             if fused:
                 self.stats.chain_fused_stages += 1
             produced[st.stage_id] = (s, t, cid)
@@ -467,6 +616,7 @@ class Dispatcher:
         """
         t = max(self.events.time, worker.busy_until)
         load_s, save_s = self.backend.overheads()
+        gpus = self._worker_gpus(worker)
         missed = False
         members: List[List[Stage]] = []
         states: List[Any] = []
@@ -480,9 +630,14 @@ class Dispatcher:
             if head.resume is not None:
                 nid, step = head.resume
                 cid = self.plan.node(nid).ckpts.get(step)
-                state = loaded.get(cid) if cid is not None else None
-                if state is None:
-                    got = self._load_resume(nid, step)
+                if cid is not None and cid in loaded:
+                    # copy-on-fanout: a dedup'd sibling load must never hand
+                    # the SAME pytree object to two members — an in-place
+                    # backend (or donation under fused mesh execution)
+                    # would alias their carries
+                    state = self.backend.clone_state(loaded[cid])
+                else:
+                    got = self._load_resume(nid, step, worker)
                     if got is None:
                         missed = True
                         self.scheduler.on_stages_unassigned(self.plan, chain)
@@ -504,7 +659,7 @@ class Dispatcher:
 
         n_loads = len(loaded)
         t += load_s * n_loads
-        self.stats.gpu_seconds += load_s * n_loads * self.gpus_per_worker
+        self.stats.gpu_seconds += load_s * n_loads * gpus
         self.stats.ckpt_loads += n_loads
 
         depth = len(members[0])
@@ -516,6 +671,9 @@ class Dispatcher:
         self.plan.mark_running([Request(st.node_id, st.stop)
                                 for chain in members for st in chain])
         worker.idle = False
+        self.backend.set_mesh(worker.mesh)
+        if worker.mesh is not None:
+            self.stats.mesh_placements += 1
 
         comp0 = getattr(self.backend, "compile_seconds", 0.0)
         save0 = self.stats.ckpt_save_seconds
@@ -545,6 +703,7 @@ class Dispatcher:
             for st, ctx, s in zip(chain, ctxs, out):
                 cid = self._put_boundary(ctx.path_key, st.stop, s,
                                          parent_cid=pcid)
+                self._d2d_put(cid, s, worker)
                 member_cids.append(cid)
                 pcid = cid
             cids.append(member_cids)
@@ -576,7 +735,7 @@ class Dispatcher:
                 member_dur += save_s
                 self.stats.stages_run += 1
                 self.stats.steps_run += st.steps
-                self._credit_stage(st, member_dur)
+                self._credit_stage(st, member_dur, gpus)
                 if fused_chain:
                     self.stats.chain_fused_stages += 1
                 if st.steps > 0:
@@ -584,7 +743,7 @@ class Dispatcher:
                                 else lvl_wall / len(members)) / st.steps
                     self.plan.record_profile(st.node_id, per_step)
             t += dur
-            self.stats.gpu_seconds += dur * self.gpus_per_worker
+            self.stats.gpu_seconds += dur * gpus
             for m, st in enumerate(level):
                 produced[st.stage_id] = (outs[m][j], t, cids[m][j])
                 self.events.push(t, "stage", {

@@ -58,7 +58,7 @@ Ray Tune trial.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Sequence, Set
 
 from repro.core.hpseq import HpConfig
 from repro.core.scheduler import CriticalPathScheduler, SchedulingPolicy
@@ -161,6 +161,12 @@ class EngineStats:
     kernel_fallbacks: int = 0     # kernel→oracle fallbacks traced
     ckpt_save_seconds: float = 0.0  # synchronous slice of store puts
     ckpt_load_seconds: float = 0.0  # store gets (resume loads)
+    # ---- distribution plane v2 (mesh workers; see dispatch.py) ----
+    d2d_handoffs: int = 0           # resumes served device-to-device (no
+                                    # store round-trip; same-host producer)
+    mesh_placements: int = 0        # chains/groups executed on mesh workers
+    placement_rejections: int = 0   # idle mesh workers skipped for a work
+                                    # unit (backend divisibility gate)
     # ---- checkpoint plane v2 (mirrored from CheckpointStore as growth
     # deltas per attached dispatcher; see Dispatcher._sync_store_stats) ----
     ckpt_delta_bytes: int = 0       # file bytes of delta-encoded commits
@@ -201,10 +207,18 @@ class ExecutionEngine:
                  share: bool = True,
                  max_steps_per_chain: Optional[int] = None,
                  batch_siblings: Optional[bool] = None,
-                 chain_fusion: Optional[bool] = None):
+                 chain_fusion: Optional[bool] = None,
+                 worker_meshes: Optional[Sequence] = None):
         self.plan = plan
         self.backend = backend
-        self.workers = [Worker(i) for i in range(n_workers)]
+        # worker_meshes: per-worker WorkerMesh descriptors (None entries =
+        # classic thread workers); shorter lists pad with None
+        meshes = list(worker_meshes or [])
+        if len(meshes) > n_workers:
+            raise ValueError(
+                f"{len(meshes)} worker meshes for {n_workers} workers")
+        meshes += [None] * (n_workers - len(meshes))
+        self.workers = [Worker(i, mesh=m) for i, m in enumerate(meshes)]
         self.gpus_per_worker = gpus_per_worker
         self.scheduler = scheduler or CriticalPathScheduler()
         # NOT `store or ...`: an empty CheckpointStore is falsy (__len__ == 0)

@@ -59,7 +59,11 @@ __all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
 # v2: EngineStats grew the checkpoint-plane v2 counters (delta/full bytes,
 # per-tier hits, promotions/demotions) — v1 snapshots lack the fields and
 # must be re-captured with the matching repro version
-SESSION_FORMAT_VERSION = 2
+# v3: worker tuples carry the WorkerMesh descriptor (distribution plane
+# v2) and EngineStats grew d2d/mesh-placement counters — v2 snapshots
+# would restore a mesh fleet as thread workers, silently changing
+# placement and accounting, so they are rejected like v1
+SESSION_FORMAT_VERSION = 3
 
 
 @dataclass
@@ -80,7 +84,8 @@ class SessionState:
     events: EventLoop
     scheduler: SchedulingPolicy
     stats: Any                                   # EngineStats
-    workers: List[Tuple[int, float, bool]]       # (wid, busy_until, idle)
+    workers: List[Tuple[int, float, bool, Any]]  # (wid, busy_until, idle,
+                                                 #  WorkerMesh | None)
     waiters: Dict[Tuple[str, int], List[Tuple[Any, Any]]]
     killed: Set[str]
     trials: Dict[str, Any]
@@ -113,7 +118,8 @@ def capture_session(engine, service: Optional[Dict[str, Any]] = None
         events=engine.events,
         scheduler=engine.scheduler,
         stats=engine.stats,
-        workers=[(w.wid, w.busy_until, w.idle) for w in engine.workers],
+        workers=[(w.wid, w.busy_until, w.idle, w.mesh)
+                 for w in engine.workers],
         waiters=engine.aggregator.waiters,
         killed=engine.aggregator.killed,
         trials=engine._trials,
@@ -153,7 +159,8 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
         gpus_per_worker=state.gpus_per_worker, scheduler=state.scheduler,
         store=store, share=state.share,
         max_steps_per_chain=state.max_steps_per_chain,
-        batch_siblings=state.batch_siblings, chain_fusion=state.chain_fusion)
+        batch_siblings=state.batch_siblings, chain_fusion=state.chain_fusion,
+        worker_meshes=[mesh for (_, _, _, mesh) in state.workers])
 
     # splice the captured session state into the freshly wired components —
     # the dispatcher/aggregator hold references, so patch both sides
@@ -165,8 +172,8 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
     eng.aggregator.stats = state.stats
     eng.aggregator.waiters = state.waiters
     eng.aggregator.killed = state.killed
-    for w, (wid, busy_until, idle) in zip(eng.workers, state.workers):
-        w.wid, w.busy_until, w.idle = wid, busy_until, idle
+    for w, (wid, busy_until, idle, mesh) in zip(eng.workers, state.workers):
+        w.wid, w.busy_until, w.idle, w.mesh = wid, busy_until, idle, mesh
     eng._trials = state.trials
     eng._handles = state.handles
     eng._study_trials = state.study_trials

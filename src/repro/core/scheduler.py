@@ -32,7 +32,7 @@ Policies:
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Set
+from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core.searchplan import SearchPlan
 from repro.core.stagetree import Stage, StageTree
@@ -70,6 +70,21 @@ class SchedulingPolicy:
     def on_round_start(self, plan: SearchPlan, tree: StageTree) -> None:
         """Hook invoked once per scheduling round before extraction
         (per-round caches of accounting policies)."""
+
+    def placement_hint(self, plan: SearchPlan, chains: List[List[Stage]],
+                       workers: List[Any]) -> str:
+        """Which of the mesh-compatible idle ``workers`` should host this
+        work unit (``chains``: one chain, or a sibling-chain group)?
+
+        Returns ``"wide"`` (narrowest mesh — spend devices on batching
+        more trials elsewhere), ``"deep"`` (widest mesh — spend devices
+        on sharding this chain), or ``"any"`` (first compatible).  The
+        default trades the two parallelism axes per unit: sibling groups
+        already parallelize *across trials*, so they take the narrowest
+        compatible worker, while solo chains take the widest mesh and
+        parallelize *within the model*.  With a homogeneous fleet every
+        hint degenerates to the first idle worker."""
+        return "wide" if len(chains) > 1 else "deep"
 
     def assign(self, plan: SearchPlan, tree: StageTree, n_paths: int,
                taken: Optional[set] = None) -> List[List[Stage]]:

@@ -119,21 +119,25 @@ class Study:
                store: Optional[CheckpointStore] = None,
                max_steps_per_chain: Optional[int] = None,
                batch_siblings: Optional[bool] = None,
-               chain_fusion: Optional[bool] = None) -> ExecutionEngine:
+               chain_fusion: Optional[bool] = None,
+               worker_meshes: Optional[Sequence] = None) -> ExecutionEngine:
         """``policy`` selects the scheduling policy by name ("critical_path",
         "weighted_fanout", "fifo", "fair_share") or instance; the legacy
         ``weighted_paths`` flag is kept as a shorthand for the default.
         ``batch_siblings`` forces sibling-trial batching on/off and
         ``chain_fusion`` forces chain-fused execution (device-resident
         carries + write-behind boundary checkpoints) on/off (defaults:
-        whatever the backend supports)."""
+        whatever the backend supports).  ``worker_meshes`` gives workers
+        device sets (:class:`repro.dist.meshes.WorkerMesh`; None entries =
+        thread workers)."""
         return ExecutionEngine(
             self.db.get(self.key), backend, n_workers=n_workers,
             gpus_per_worker=gpus_per_worker,
             scheduler=_resolve_policy(policy, weighted_paths),
             store=store, share=share,
             max_steps_per_chain=max_steps_per_chain,
-            batch_siblings=batch_siblings, chain_fusion=chain_fusion)
+            batch_siblings=batch_siblings, chain_fusion=chain_fusion,
+            worker_meshes=worker_meshes)
 
     def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
             **kw) -> EngineStats:
@@ -231,7 +235,8 @@ class StudyService:
                  store: Optional[CheckpointStore] = None,
                  max_steps_per_chain: Optional[int] = None,
                  batch_siblings: Optional[bool] = None,
-                 chain_fusion: Optional[bool] = None):
+                 chain_fusion: Optional[bool] = None,
+                 worker_meshes: Optional[Sequence] = None):
         self.db = db
         self.backend = backend
         self.n_workers = n_workers
@@ -242,6 +247,7 @@ class StudyService:
         self.max_steps_per_chain = max_steps_per_chain
         self.batch_siblings = batch_siblings
         self.chain_fusion = chain_fusion
+        self.worker_meshes = worker_meshes
         self._engine: Optional[ExecutionEngine] = None
         self._key: Optional[str] = None
         self._futures: List[StudyFuture] = []
@@ -289,7 +295,8 @@ class StudyService:
                 scheduler=self.scheduler, store=self.store, share=self.share,
                 max_steps_per_chain=self.max_steps_per_chain,
                 batch_siblings=self.batch_siblings,
-                chain_fusion=self.chain_fusion)
+                chain_fusion=self.chain_fusion,
+                worker_meshes=self.worker_meshes)
         elif key != self._key:
             raise ValueError(
                 f"study key {key!r} differs from this session's {self._key!r}"
@@ -416,7 +423,8 @@ class StudyService:
                   policy=state.scheduler, store=eng.store,
                   max_steps_per_chain=state.max_steps_per_chain,
                   batch_siblings=state.batch_siblings,
-                  chain_fusion=state.chain_fusion)
+                  chain_fusion=state.chain_fusion,
+                  worker_meshes=[m for (_, _, _, m) in state.workers])
         svc._engine = eng
         svc._key = state.plan_key
         svc._futures = list(state.service.get("futures", []))

@@ -25,6 +25,7 @@ Backends:
 
 from __future__ import annotations
 
+import copy
 import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -117,6 +118,36 @@ class TrainerBackend:
     def overheads(self) -> Tuple[float, float]:
         """(checkpoint-load seconds, checkpoint-save seconds)."""
         return (0.0, 0.0)
+
+    # ------------------------------------------------------- mesh protocol
+    def set_mesh(self, mesh: Optional[Any]) -> None:
+        """Bind subsequent ``run_*`` calls to the dispatching worker's
+        device mesh (a :class:`repro.dist.meshes.WorkerMesh`), or reset
+        with ``None``.  Host-only backends ignore it — the dispatcher
+        calls this before every execution, so sharded backends must treat
+        it as cheap (cache the materialized mesh)."""
+
+    def mesh_compatible(self, mesh: Any,
+                        ctxs: Sequence[StageContext]) -> bool:
+        """Can the work described by ``ctxs`` run on ``mesh``?  The
+        dispatcher skips incompatible workers during placement (counting
+        ``placement_rejections``).  Default: any mesh hosts any work."""
+        return True
+
+    def clone_state(self, state: Any) -> Any:
+        """An independent copy of a state pytree — the dispatcher's
+        copy-on-fanout when one resume load feeds several sibling group
+        members.  Backends with immutable leaves (JAX arrays) override
+        with a cheap container copy."""
+        return copy.deepcopy(state)
+
+    def device_transfer(self, state: Any, mesh: Optional[Any]) -> Any:
+        """Device-to-device handoff of a boundary state to a worker bound
+        to ``mesh``, bypassing the checkpoint store.  Must return a state
+        safe to hand to one consumer (a fresh copy, or one with immutable
+        leaves); return ``None`` to decline — the dispatcher then falls
+        back to the store."""
+        return self.clone_state(state)
 
 
 # ---------------------------------------------------------------------------

@@ -6,8 +6,11 @@
 device allocation happens here.
 """
 
+from repro.dist.meshes import WorkerMesh, plan_worker_meshes
 from repro.dist.sharding import (MESH_SIZES, ShardingRules, batch_specs,
-                                 cache_specs, param_specs, seq_constrainer)
+                                 cache_specs, generic_param_specs,
+                                 param_specs, seq_constrainer)
 
-__all__ = ["MESH_SIZES", "ShardingRules", "batch_specs", "cache_specs",
-           "param_specs", "seq_constrainer"]
+__all__ = ["MESH_SIZES", "ShardingRules", "WorkerMesh", "batch_specs",
+           "cache_specs", "generic_param_specs", "param_specs",
+           "plan_worker_meshes", "seq_constrainer"]

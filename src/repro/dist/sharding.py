@@ -40,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 from repro.models.config import ModelConfig
 
 __all__ = ["MESH_SIZES", "ShardingRules", "param_specs", "batch_specs",
-           "cache_specs", "seq_constrainer", "mesh_sizes_of"]
+           "cache_specs", "seq_constrainer", "mesh_sizes_of",
+           "generic_param_specs"]
 
 Axis = Union[None, str, Tuple[str, ...]]
 
@@ -216,6 +217,46 @@ def param_specs(shapes: Any, rules: ShardingRules,
         return _spec(leaf, roles, n_lead, sizes)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def generic_param_specs(shapes: Any, rules: ShardingRules,
+                        sizes: Optional[Mapping[str, int]] = None,
+                        n_lead: int = 0) -> Any:
+    """Best-effort at-rest placement for *arbitrary* parameter trees (tasks
+    the name-keyed :func:`param_specs` table does not know — ResNets, MLPs,
+    anything a worker mesh hosts).
+
+    Per leaf: the largest dimension passing the divisibility gate shards
+    over ``rules.fsdp``, the largest remaining one over ``rules.tp``;
+    everything else (and any leaf nothing divides on) replicates.  Roles
+    whose mesh axis is absent from ``sizes`` are skipped, so the single-
+    axis worker meshes reuse the production preset unchanged.  The first
+    ``n_lead`` dims (member-stacked group carries) are never sharded.
+    """
+    sizes = MESH_SIZES if sizes is None else sizes
+
+    def usable(ax: Axis) -> bool:
+        names = ax if isinstance(ax, (tuple, list)) else (ax,)
+        return all(a in sizes for a in names)
+
+    roles = [ax for ax in (rules.fsdp, rules.tp)
+             if ax is not None and usable(ax) and _axis_size(ax, sizes) > 1]
+
+    def leaf_spec(leaf) -> P:
+        axes: list = [None] * leaf.ndim
+        free = list(range(n_lead, leaf.ndim))
+        for ax in roles:
+            n = _axis_size(ax, sizes)
+            cands = [i for i in free if leaf.shape[i] % n == 0
+                     and leaf.shape[i] > 0]
+            if not cands:
+                continue
+            pick = max(cands, key=lambda i: leaf.shape[i])
+            axes[pick] = ax
+            free.remove(pick)
+        return P(*axes)
+
+    return jax.tree.map(leaf_spec, shapes)
 
 
 # ---------------------------------------------------------------------------

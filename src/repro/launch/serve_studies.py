@@ -25,6 +25,7 @@ from repro.core import SearchPlanDB, StudyService, StudySpec
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridSearchSpace, GridTuner
 from repro.core.hpseq import Constant, Exponential, MultiStep, StepLR, Warmup
+from repro.dist.meshes import plan_worker_meshes
 from repro.train.checkpoint import CheckpointStore, DirectoryObjectStore
 
 
@@ -60,6 +61,10 @@ def _report(stats) -> None:
               f"{stats.ckpt_tier_demotions} demotions, "
               f"{stats.ckpt_tier_promotions} promotions, "
               f"{stats.ckpt_tmp_reclaimed} stale tmp reclaimed")
+    if stats.mesh_placements:
+        print(f"mesh plane: {stats.mesh_placements} mesh placements, "
+              f"{stats.placement_rejections} rejections, "
+              f"{stats.d2d_handoffs} d2d handoffs")
     for sid, ss in sorted(stats.by_study.items()):
         print(f"  {sid}: {ss.gpu_seconds / 3600:7.1f} GPU-h  "
               f"{ss.steps_run:6d} steps served  "
@@ -106,6 +111,14 @@ def main() -> None:
     ap.add_argument("--disk-capacity-mb", type=float, default=None,
                     help="local disk tier capacity; LRU blobs past it "
                          "demote to --remote-dir")
+    ap.add_argument("--devices-per-worker", type=int, default=0,
+                    help="give every worker a mesh of this many devices "
+                         "(distribution plane v2; 0 = plain thread "
+                         "workers).  The simulator accounts the mesh "
+                         "width; real backends shard over it.")
+    ap.add_argument("--mesh-host", default="host0",
+                    help="host label for the worker meshes (device-to-"
+                         "device checkpoint handoff is host-local)")
     args = ap.parse_args()
     if args.remote_dir and not args.ckpt_dir:
         ap.error("--remote-dir requires --ckpt-dir")
@@ -118,9 +131,13 @@ def main() -> None:
         return SimulatedTrainer(base_seconds_per_step=args.sec_per_step,
                                 horizon=args.steps)
 
+    meshes = (plan_worker_meshes(args.workers, args.devices_per_worker,
+                                 host=args.mesh_host)
+              if args.devices_per_worker > 0 else None)
     db = SearchPlanDB()
     svc = StudyService(db, backend(), n_workers=args.workers,
-                       policy=args.policy, store=_build_store(args))
+                       policy=args.policy, store=_build_store(args),
+                       worker_meshes=meshes)
     _submit_all(svc, args)
 
     if args.snapshot_at is not None:

@@ -78,6 +78,24 @@ kernels' batching rules fold the member axis into the kernel grid (one
 launch per group).  ``kernel_calls`` / ``kernel_fallbacks`` expose the
 kernel plane's trace-time counters (cumulative since this trainer's
 construction) for ``EngineStats``.
+
+Mesh workers (distribution plane v2): :meth:`set_mesh` binds the trainer
+to the dispatching worker's :class:`~repro.dist.meshes.WorkerMesh` before
+each work unit.  A ``None`` or 1-device mesh is the default path —
+bit-identical to thread-worker execution.  On a wider mesh the fused
+carry lives **sharded at rest**: ``(params, opt)`` is placed with
+:func:`repro.dist.sharding.generic_param_specs` (largest dividing dim →
+``fsdp`` axis, largest remaining → ``tp``; PR 3's divisibility gate);
+every chunk executable is wrapped to all-gather the carry to replicated
+before the arithmetic, and the output re-scatters to the at-rest
+placement *between* executables (``device_put``) — sharding is pure data
+movement, so on CPU the sharded path stays bit-identical to the
+unsharded one while the carry demonstrably lives distributed between
+chunks.  Sibling groups stack members on a leading axis that is never
+sharded (``n_lead=1``), so trial-batching (vmap) and sharding compose as
+two orthogonal parallelism axes.  Boundary snapshots are gathered to one
+device before they leave the trainer — checkpoints and eval stay
+unsharded.  The live mesh key joins every executable cache key.
 """
 
 from __future__ import annotations
@@ -88,10 +106,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.trainer import StageContext, TrainerBackend
 from repro.core.values import desc_static, desc_values
 from repro.data.pipeline import DataPipeline
+from repro.dist.sharding import generic_param_specs
 from repro.kernels import ops as kernel_ops
 from repro.kernels.optim import fused_apply_update
 from repro.train.checkpoint import stack_pytrees, unstack_pytree
@@ -163,6 +183,12 @@ class JaxTrainer(TrainerBackend):
         # virtual clock (a deployment amortizes compiles across the study).
         self.compile_seconds = 0.0
         self.exec_calls = 0       # compiled-executable dispatches issued
+        # -------- mesh plane (distribution plane v2; see module docstring)
+        self._wmesh = None                      # live WorkerMesh (>1 device)
+        self._mesh = None                       # its jax.sharding.Mesh
+        self._mesh_key: Optional[Tuple] = None  # joins executable cache keys
+        self._meshes: Dict[Tuple, Any] = {}     # WorkerMesh.key -> jax Mesh
+        self._mesh_ok: Dict[Tuple, bool] = {}   # mesh_compatible verdicts
 
     # ------------------------------------------------- kernel-plane counters
     @property
@@ -175,6 +201,98 @@ class JaxTrainer(TrainerBackend):
     def kernel_fallbacks(self) -> int:
         """Kernel→oracle fallbacks traced since construction."""
         return kernel_ops.KERNEL_STATS.fallbacks - self._kernel_stats0[1]
+
+    # ------------------------------------------------------------ mesh plane
+    def set_mesh(self, mesh) -> None:
+        """Bind to the dispatching worker's mesh (None = thread worker).
+
+        1-device meshes take the default path — no sharding, no new cache
+        entries — so a 1-device-mesh fleet is bit- and stats-identical to
+        a thread fleet.  Wider meshes build (and cache) the live
+        ``jax.sharding.Mesh`` once per distinct ``WorkerMesh.key``."""
+        if mesh is None or mesh.n_devices == 1:
+            self._wmesh = self._mesh = self._mesh_key = None
+            return
+        key = mesh.key
+        m = self._meshes.get(key)
+        if m is None:
+            m = mesh.jax_mesh()
+            self._meshes[key] = m
+        self._wmesh, self._mesh, self._mesh_key = mesh, m, key
+
+    def mesh_compatible(self, mesh, ctxs) -> bool:
+        """PR 3's divisibility gate as a placement gate: a >1-device mesh
+        is only worth occupying when at least one parameter dimension
+        actually shards under ``generic_param_specs`` — otherwise every
+        leaf replicates and the extra devices buy nothing."""
+        if mesh is None or mesh.n_devices == 1:
+            return True
+        ok = self._mesh_ok.get(mesh.key)
+        if ok is None:
+            shapes = jax.eval_shape(
+                lambda: self.task.init(jax.random.PRNGKey(self.seed)))
+            specs = generic_param_specs(shapes, mesh.rules, sizes=mesh.sizes)
+            ok = any(any(ax is not None for ax in spec)
+                     for spec in jax.tree.leaves(
+                         specs, is_leaf=lambda x: isinstance(x, P)))
+            self._mesh_ok[mesh.key] = ok
+        return ok
+
+    def clone_state(self, state):
+        # jax array leaves are immutable — a fresh container tree is a
+        # full-depth safe copy (the dispatcher's copy-on-fanout)
+        return jax.tree.map(lambda x: x, state)
+
+    def device_transfer(self, state, mesh):
+        """Host-local handoff: re-home the device-resident leaves onto the
+        consumer's first device inside a fresh container tree.  Declines
+        (→ store fallback) when the mesh's devices are not visible to
+        this process."""
+        out = dict(state)
+        if mesh is not None:
+            try:
+                dev = mesh.jax_mesh().devices.flat[0]
+            except Exception:
+                return None
+            for k in ("params", "opt"):
+                if out.get(k) is not None:
+                    out[k] = jax.device_put(out[k], dev)
+        return out
+
+    def _carry_shardings(self, carry, n_lead: int):
+        """NamedSharding tree for the at-rest carry placement (member-stack
+        axis, when present, never shards)."""
+        specs = generic_param_specs(carry, self._wmesh.rules,
+                                    sizes=self._wmesh.sizes, n_lead=n_lead)
+        return jax.tree.map(lambda s: NamedSharding(self._mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def _meshed_build(self, build, carry, n_lead: int):
+        """Wrap a chunk-body builder for mesh execution: the carry enters
+        sharded at rest and is gathered to replicated before the
+        arithmetic — pure data movement, so the body stays CPU-bitwise
+        vs the unsharded build.  The output deliberately carries NO
+        sharding constraint: an in-program re-scatter back-propagates
+        partitioning into the tail arithmetic (different reduction
+        order → ±ulp drift), so the caller re-scatters outside the
+        executable with ``device_put`` instead."""
+        if self._mesh is None:
+            return build
+        shardings = self._carry_shardings(carry, n_lead)
+        replicated = jax.tree.map(
+            lambda _: NamedSharding(self._mesh, P()), shardings,
+            is_leaf=lambda x: isinstance(x, NamedSharding))
+
+        def wrapped_build():
+            fn = build()
+
+            def meshed(carry, *rest):
+                carry = jax.lax.with_sharding_constraint(carry, replicated)
+                return fn(carry, *rest)
+
+            return meshed
+
+        return wrapped_build
 
     @property
     def supports_batched_stages(self) -> bool:  # type: ignore[override]
@@ -294,10 +412,11 @@ class JaxTrainer(TrainerBackend):
     def _call_fused(self, opt_name: str, n_steps: int, slab_sig: Tuple,
                     hp_sig: Tuple, donate: bool, args: Tuple):
         key = ("fused", opt_name, n_steps, slab_sig, hp_sig, donate,
-               self.use_scan)
-        return self._call_executable(
-            key, lambda: self._make_chunk_body(opt_name, n_steps), donate,
-            args)
+               self._mesh_key, self.use_scan)
+        build = self._meshed_build(
+            lambda: self._make_chunk_body(opt_name, n_steps), args[0],
+            n_lead=0)
+        return self._call_executable(key, build, donate, args)
 
     def _call_group(self, opt_name: str, group: int, n_steps: int,
                     slab_sig: Tuple, hp_sig: Tuple, shared_slab: bool,
@@ -306,7 +425,8 @@ class JaxTrainer(TrainerBackend):
         the same data stream — the slab is gathered once and broadcast to
         every member inside the executable instead of stacked per member."""
         key = ("group", opt_name, group, n_steps, slab_sig, hp_sig,
-               shared_slab, self.vectorize_groups, self.use_scan)
+               shared_slab, self._mesh_key, self.vectorize_groups,
+               self.use_scan)
 
         def build():
             chunk = self._make_chunk_body(opt_name, n_steps)
@@ -329,7 +449,9 @@ class JaxTrainer(TrainerBackend):
 
             return grouped
 
-        return self._call_executable(key, build, self._donate, args)
+        return self._call_executable(
+            key, self._meshed_build(build, args[0], n_lead=1), self._donate,
+            args)
 
     # -------------------------------------------------------------- execute
     def run_stage(self, state: Dict[str, Any], ctx: StageContext
@@ -422,6 +544,11 @@ class JaxTrainer(TrainerBackend):
             carry = (params_l[0], opt_l[0])
         else:
             carry = (stack_pytrees(params_l), stack_pytrees(opt_l))
+        n_lead = 0 if group == 1 else 1   # member-stack axis never shards
+        carry_shd = None                  # at-rest NamedSharding tree
+        if self._mesh is not None:
+            carry_shd = self._carry_shardings(carry, n_lead)
+            carry = jax.device_put(carry, carry_shd)
         boundaries: List[List[Dict[str, Any]]] = [[] for _ in range(group)]
 
         for j in range(depth):
@@ -448,6 +575,9 @@ class JaxTrainer(TrainerBackend):
                 # run_stage would re-init on the restored state
                 carry = (carry[0], init_opt_state(stage_opt, carry[0]))
                 opt_name = stage_opt
+                if carry_shd is not None:    # fresh slots: back to at-rest
+                    carry_shd = self._carry_shardings(carry, n_lead)
+                    carry = jax.device_put(carry, carry_shd)
             hp_sig = (tuple(sorted(names0)), tuple(sorted(static_hp0)))
 
             # the previous boundary snapshot aliases the carry: the first
@@ -483,6 +613,11 @@ class JaxTrainer(TrainerBackend):
                             opt_name, group, k_len, self._slab_sig(slabs[0]),
                             hp_sig, shared_data,
                             (carry, static_hp0, hp_xs, slab, steps))
+                    if carry_shd is not None:
+                        # re-scatter to the at-rest placement OUTSIDE the
+                        # executable (see _meshed_build: an in-program
+                        # output constraint would cost bit-exactness)
+                        carry = jax.device_put(carry, carry_shd)
                     first = False
                     w0 = w1
 
@@ -493,6 +628,12 @@ class JaxTrainer(TrainerBackend):
             else:
                 params_out = unstack_pytree(carry[0], group)
                 opt_out = unstack_pytree(carry[1], group)
+            if self._mesh is not None:
+                # snapshots leave the trainer unsharded: checkpoints, eval
+                # and cross-worker handoff all see single-device trees
+                dev = self._mesh.devices.flat[0]
+                params_out = [jax.device_put(p, dev) for p in params_out]
+                opt_out = [jax.device_put(o, dev) for o in opt_out]
             datas = ([pipes[0].state()] * group if shared_data
                      else [p.state() for p in pipes])
             for m in range(group):

@@ -56,14 +56,16 @@ def stats_key(stats):
             stats.ckpt_saves, stats.ckpt_loads)
 
 
-def run_sha(backend, chain_fusion, store=None, n_workers=2):
+def run_sha(backend, chain_fusion, store=None, n_workers=2,
+            worker_meshes=None):
     db = SearchPlanDB()
     study = Study.create(db, "m", "d", ("lr",))
     trials = [seq_trial(0.1 - 0.01 * i, 0.01 - 0.001 * i, steps=24)
               for i in range(6)]
     tuner = SHATuner(trials, min_steps=12, max_steps=24, eta=2)
     eng = study.engine(backend, n_workers=n_workers, store=store,
-                       chain_fusion=chain_fusion)
+                       chain_fusion=chain_fusion,
+                       worker_meshes=worker_meshes)
     stats = eng.run([tuner])
     return db.get(study.key), eng, stats
 
@@ -90,6 +92,26 @@ def test_chain_fusion_is_accounting_invariant():
     for nid, node in plan_f.nodes.items():
         assert node.metrics == plan_u.nodes[nid].metrics
         assert set(node.ckpts) == set(plan_u.nodes[nid].ckpts)
+
+
+def test_one_device_mesh_fleet_is_accounting_invariant():
+    """Distribution plane v2: width-1 worker meshes are pure bookkeeping —
+    the chain-fused batched run replays the thread fleet's virtual clock,
+    checkpoints and metrics exactly; only the mesh-plane counters move."""
+    from repro.dist.meshes import plan_worker_meshes
+
+    plan_m, eng_m, stats_m = run_sha(
+        BatchedChainSimTrainer(), chain_fusion=True,
+        worker_meshes=plan_worker_meshes(2, 1))
+    plan_t, eng_t, stats_t = run_sha(BatchedChainSimTrainer(),
+                                     chain_fusion=True)
+    assert stats_m.mesh_placements > 0
+    assert stats_t.mesh_placements == 0
+    assert stats_key(stats_m) == stats_key(stats_t)
+    assert set(plan_m.nodes) == set(plan_t.nodes)
+    for nid, node in plan_m.nodes.items():
+        assert node.metrics == plan_t.nodes[nid].metrics
+        assert set(node.ckpts) == set(plan_t.nodes[nid].ckpts)
 
 
 def test_simulated_backend_defaults_to_unfused():

@@ -282,3 +282,37 @@ def test_delta_encoded_store_is_bitwise_lossless(setup, tmp_path):
         assert_states_identical(
             {k: restored[k] for k in ("step", "data", "params", "opt")},
             solo_state)
+
+
+def test_one_device_mesh_workers_bitwise_equal_thread_workers(setup):
+    """Distribution plane v2: a fleet of width-1 worker meshes takes the
+    backend's default (unsharded) execution path — leaf checkpoints and
+    metrics are bit-identical to plain thread workers, while the engine
+    still counts the mesh placements (and serves same-host resumes
+    device-to-device)."""
+    backend = setup
+    trials = [
+        Trial(HpConfig({"lr": MultiStep(0.05, [8], values=[0.05, v]),
+                        "bs": Constant(32)}), 16)
+        for v in (0.02, 0.005)
+    ]
+
+    def run(meshes):
+        db = SearchPlanDB()
+        study = Study.create(db, "resnet8", "synth", ("lr", "bs"))
+        eng = study.engine(backend, n_workers=2, worker_meshes=meshes)
+        stats = eng.run([GridTuner(list(trials))])
+        return db.get(study.key), eng, stats
+
+    from repro.dist.meshes import plan_worker_meshes
+    plan_t, eng_t, stats_t = run(None)
+    plan_m, eng_m, stats_m = run(plan_worker_meshes(2, 1))
+
+    assert stats_m.mesh_placements > 0
+    assert stats_t.mesh_placements == 0
+    assert stats_m.steps_run == stats_t.steps_run
+    for t in trials:
+        leaf = plan_m.trial_paths[t.trial_id][-1]
+        assert plan_m.nodes[leaf].metrics[16] == plan_t.nodes[leaf].metrics[16]
+        assert_states_identical(eng_m.store.get(plan_m.nodes[leaf].ckpts[16]),
+                                eng_t.store.get(plan_t.nodes[leaf].ckpts[16]))

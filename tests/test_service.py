@@ -31,7 +31,7 @@ def det(stats):
         ckpt_bytes_written=0, ckpt_delta_commits=0, ckpt_delta_rebases=0,
         ckpt_mem_hits=0, ckpt_disk_hits=0, ckpt_remote_hits=0,
         ckpt_store_misses=0, ckpt_tier_promotions=0, ckpt_tier_demotions=0,
-        ckpt_tmp_reclaimed=0)
+        ckpt_tmp_reclaimed=0, d2d_handoffs=0)
 
 
 def space():
