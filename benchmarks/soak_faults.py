@@ -1,0 +1,143 @@
+"""Fault-plane soak: K seeded fault schedules against a multi-study session.
+
+Each seed drives a full fair-share session (two studies, staggered
+arrival) through an aggressive schedule of worker crashes, transient
+stage failures and store outages.  Per seed the soak asserts, in-bench:
+
+* **completion** — every study finishes (no hang; the CI step additionally
+  wraps the whole soak in a wall-clock ``timeout``);
+* **losslessness** — every final leaf checkpoint is bitwise-identical to
+  the fault-free reference run (faults move work around, they never
+  change what it computes);
+* **no quarantined-forever fleet** — quarantine is probation, not
+  banishment: a session that ends with every worker quarantined would
+  deadlock a longer workload.
+
+Outputs:
+
+* ``FAULT_SOAK.json``   — one row per seed (counters + wall time),
+* ``FAULT_LOG_faults.jsonl`` — the concatenated deterministic fault logs
+  (one JSON object per injected fault), uploaded as a CI artifact so a
+  failing seed's schedule can be replayed exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+SEEDS = tuple(range(6))
+STEPS = 80
+WORKERS = 4
+RATES = dict(stage_fault_rate=0.25, crash_rate=0.15, outage_rate=0.03,
+             outage_ops=2)
+MAX_FAULTS = 64          # terminate even under pathological schedules
+
+
+def _session(injector):
+    from repro.core import SearchPlanDB, StudyService, StudySpec
+    from repro.core.faults import raw_store
+    from repro.core.hpseq import Constant, Exponential, StepLR, Warmup
+    from repro.core.trainer import SimulatedTrainer
+    from repro.core.tuners import GridSearchSpace, GridTuner
+
+    space = GridSearchSpace(
+        fns={"lr": [StepLR(0.1, 0.1, [30]), StepLR(0.1, 0.1, [40]),
+                    Warmup(5, 0.1, Exponential(0.1, 0.95))],
+             "bs": [Constant(64), Constant(128)]})
+    spec = StudySpec("m", "d", ("lr", "bs"))
+    svc = StudyService(SearchPlanDB(), SimulatedTrainer(horizon=STEPS),
+                       n_workers=WORKERS, policy="fair_share",
+                       fault_injector=injector)
+    futures = [svc.submit(spec, GridTuner(space.trials(STEPS))),
+               svc.submit(spec, GridTuner(space.trials(STEPS)[:4]),
+                          at=200.0)]
+    stats = svc.close()
+    eng = svc._engine
+    store = raw_store(eng.store)
+    leaves = {}
+    for nid, node in eng.plan.nodes.items():
+        for step, cid in node.ckpts.items():
+            if store.contains(cid):
+                leaves[(nid, step)] = store.get(cid)
+    return stats, leaves, futures, eng
+
+
+def _leaves_equal(a, b):
+    import numpy as np
+    if set(a) != set(b):
+        return False
+    for k in a:
+        if set(a[k]) != set(b[k]):
+            return False
+        for name in a[k]:
+            if not np.array_equal(np.asarray(a[k][name]),
+                                  np.asarray(b[k][name])):
+                return False
+    return True
+
+
+def main():
+    from repro.core import FaultInjector
+
+    ref_stats, ref_leaves, ref_futures, _ = _session(None)
+    assert all(f.done() for f in ref_futures)
+
+    rows, fault_log = [], []
+    for seed in SEEDS:
+        inj = FaultInjector(seed, max_faults=MAX_FAULTS, **RATES)
+        t0 = time.perf_counter()
+        stats, leaves, futures, eng = _session(inj)
+        wall = time.perf_counter() - t0
+
+        assert all(f.done() for f in futures), f"seed {seed}: study hung"
+        assert stats.steps_run == ref_stats.steps_run, \
+            f"seed {seed}: {stats.steps_run} != {ref_stats.steps_run} steps"
+        assert _leaves_equal(ref_leaves, leaves), \
+            f"seed {seed}: leaves diverged from the fault-free run"
+        stuck = [w.wid for w in eng.workers
+                 if w.quarantined_until > eng.time]
+        assert len(stuck) < len(eng.workers), \
+            f"seed {seed}: whole fleet quarantined at session end"
+
+        fault_log.extend(inj.log)
+        rows.append({
+            "seed": seed,
+            "wall_s": round(wall, 3),
+            "faults_injected": stats.faults_injected,
+            "by_kind": dict(inj.by_kind),
+            "stage_failures": stats.stage_failures,
+            "stage_retries": stats.stage_retries,
+            "workers_quarantined": stats.workers_quarantined,
+            "groups_degraded": stats.groups_degraded,
+            "wasted_gpu_seconds": stats.wasted_gpu_seconds,
+            "retries_verified": inj.retries_verified,
+            "steps_run": stats.steps_run,
+            "lossless": True,
+        })
+        print(f"seed {seed}: {stats.faults_injected:3d} faults, "
+              f"{stats.stage_retries:3d} retries, "
+              f"{stats.workers_quarantined} quarantines, "
+              f"{stats.wasted_gpu_seconds:7.1f} GPU-s wasted, "
+              f"lossless, {wall:.2f}s wall")
+
+    assert any(r["faults_injected"] for r in rows), \
+        "soak injected zero faults across every seed — rates misconfigured"
+    return {"rates": RATES, "max_faults": MAX_FAULTS, "steps": STEPS,
+            "workers": WORKERS, "rows": rows, "fault_log": fault_log}
+
+
+def dump_json(result, path="FAULT_SOAK.json",
+              log_path="FAULT_LOG_faults.jsonl"):
+    log = result.pop("fault_log")
+    with open(log_path, "w") as f:
+        for entry in log:
+            f.write(json.dumps(entry) + "\n")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {path} ({len(result['rows'])} seeds) and "
+          f"{log_path} ({len(log)} fault records)")
+
+
+if __name__ == "__main__":
+    dump_json(main())

@@ -14,6 +14,9 @@ from repro.core.scheduler import (POLICIES, CriticalPathScheduler,
                                   SchedulingPolicy, WeightedFanoutScheduler,
                                   make_policy)
 from repro.core.engine import EngineStats, ExecutionEngine, StudyStats, Tuner
+from repro.core.faults import (FatalStageError, FaultError, FaultInjector,
+                               FaultyBackend, FaultyStore, StoreOutageError,
+                               TransientStageError, WorkerCrashed)
 from repro.core.trainer import SimulatedTrainer, StageContext, TrainerBackend
 from repro.core.db import SearchPlanDB, study_key
 from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps

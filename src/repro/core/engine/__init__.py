@@ -22,10 +22,13 @@ from repro.core.engine.events import Event, EventLoop
 from repro.core.engine.dispatch import Dispatcher, Worker
 from repro.core.engine.aggregator import Aggregator
 from repro.core.engine.session import (SessionState, capture_session,
-                                       load_session, restore_engine,
-                                       save_session)
+                                       load_latest_session, load_session,
+                                       migrate_session, restore_engine,
+                                       save_session, save_session_rotated,
+                                       session_rotation)
 
 __all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats",
            "StudyStats", "Event", "EventLoop", "Dispatcher", "Worker",
            "Aggregator", "SessionState", "capture_session", "restore_engine",
-           "save_session", "load_session"]
+           "migrate_session", "save_session", "load_session",
+           "save_session_rotated", "load_latest_session", "session_rotation"]

@@ -67,6 +67,7 @@ from repro.core.stagetree import StageTreeBuilder
 from repro.core.engine.aggregator import Aggregator
 from repro.core.engine.dispatch import Dispatcher, Worker
 from repro.core.engine.events import EventLoop
+from repro.core.faults import FaultyBackend, FaultyStore
 from repro.core.trainer import TrainerBackend
 from repro.core.trial import Trial
 from repro.train.checkpoint import CheckpointStore
@@ -182,6 +183,17 @@ class EngineStats:
     ckpt_tier_promotions: int = 0   # remote blobs rehydrated onto disk
     ckpt_tier_demotions: int = 0    # LRU disk blobs pushed to remote
     ckpt_tmp_reclaimed: int = 0     # stale temp files swept at store init
+    # ---- fault plane (see core/faults.py + the dispatcher failure
+    # domains).  wasted_gpu_seconds is charged separately from
+    # gpu_seconds and NEVER split-charged into by_study — a retry is the
+    # engine's waste, not the sharing studies' bill. ----
+    stage_failures: int = 0         # failed execution attempts absorbed
+    stage_retries: int = 0          # retries scheduled (transient faults)
+    workers_quarantined: int = 0    # quarantine entries (repeat crashers)
+    groups_degraded: int = 0        # batched groups degraded to solo runs
+    faults_injected: int = 0        # injector faults fired (delta-mirrored
+                                    # like the store counters)
+    wasted_gpu_seconds: float = 0.0  # GPU time burned by failed attempts
     by_study: Dict[str, StudyStats] = field(default_factory=dict)
 
     @property
@@ -208,7 +220,15 @@ class ExecutionEngine:
                  max_steps_per_chain: Optional[int] = None,
                  batch_siblings: Optional[bool] = None,
                  chain_fusion: Optional[bool] = None,
-                 worker_meshes: Optional[Sequence] = None):
+                 worker_meshes: Optional[Sequence] = None,
+                 fault_injector=None):
+        # fault plane: wrap backend and store in the injector's fault
+        # surface BEFORE anything reads capability flags or touches the
+        # store — the whole engine then sees the faulty views, and the
+        # dispatcher discovers the injector via backend.fault_injector
+        if fault_injector is not None:
+            backend = FaultyBackend(backend, fault_injector)
+        self.fault_injector = fault_injector
         self.plan = plan
         self.backend = backend
         # worker_meshes: per-worker WorkerMesh descriptors (None entries =
@@ -224,6 +244,9 @@ class ExecutionEngine:
         # NOT `store or ...`: an empty CheckpointStore is falsy (__len__ == 0)
         # and would be silently replaced, orphaning the caller's store
         self.store = CheckpointStore() if store is None else store
+        if fault_injector is not None and not isinstance(self.store,
+                                                         FaultyStore):
+            self.store = FaultyStore(self.store, fault_injector)
         self.share = share
         self.max_steps_per_chain = max_steps_per_chain
         # sibling-trial batching defaults to whatever the backend supports
@@ -375,6 +398,11 @@ class ExecutionEngine:
                 handle.tuner.on_result(trial, step, metrics)
         elif ev.kind == "idle":
             self.workers[ev.payload].idle = True
+        elif ev.kind == "retry":
+            # backoff expired: release the failed stages' running marks so
+            # Algorithm 1 re-derives them from the last boundary checkpoint
+            # in the dispatcher round below
+            self.dispatcher.on_retry(ev.payload)
         elif ev.kind == "admit":
             # start every admission landing at this instant before the next
             # scheduling round: same-time arrivals merge as one batch,
@@ -401,6 +429,7 @@ class ExecutionEngine:
         self.store.flush()
         # pick up counter growth from the flushed write-behind commits
         self.dispatcher._sync_store_stats()
+        self.dispatcher._sync_fault_stats()
         self.stats.end_to_end = self.events.time
         return self.stats
 

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import os
 import pickle
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -54,16 +55,23 @@ from repro.core.trainer import TrainerBackend
 from repro.train.checkpoint import CheckpointStore
 
 __all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
-           "restore_engine", "save_session", "load_session"]
+           "restore_engine", "migrate_session", "save_session",
+           "load_session", "save_session_rotated", "load_latest_session",
+           "session_rotation"]
 
 # v2: EngineStats grew the checkpoint-plane v2 counters (delta/full bytes,
 # per-tier hits, promotions/demotions) — v1 snapshots lack the fields and
 # must be re-captured with the matching repro version
 # v3: worker tuples carry the WorkerMesh descriptor (distribution plane
-# v2) and EngineStats grew d2d/mesh-placement counters — v2 snapshots
-# would restore a mesh fleet as thread workers, silently changing
-# placement and accounting, so they are rejected like v1
-SESSION_FORMAT_VERSION = 3
+# v2) and EngineStats grew d2d/mesh-placement counters
+# v4: worker tuples carry the fault-plane crash record (failures,
+# times_quarantined, quarantined_until) and EngineStats grew the fault
+# counters.  v2/v3 snapshots are MIGRATED forward on restore (missing
+# mesh -> thread worker, missing fault fields -> clean record, missing
+# stats fields -> dataclass defaults) — rolling upgrades keep old
+# snapshots restorable.  v1 predates the versioned stats migration and
+# stays rejected.
+SESSION_FORMAT_VERSION = 4
 
 
 @dataclass
@@ -84,8 +92,10 @@ class SessionState:
     events: EventLoop
     scheduler: SchedulingPolicy
     stats: Any                                   # EngineStats
-    workers: List[Tuple[int, float, bool, Any]]  # (wid, busy_until, idle,
-                                                 #  WorkerMesh | None)
+    workers: List[Tuple]                         # (wid, busy_until, idle,
+                                                 #  WorkerMesh | None,
+                                                 #  failures, times_quar.,
+                                                 #  quarantined_until)
     waiters: Dict[Tuple[str, int], List[Tuple[Any, Any]]]
     killed: Set[str]
     trials: Dict[str, Any]
@@ -118,7 +128,8 @@ def capture_session(engine, service: Optional[Dict[str, Any]] = None
         events=engine.events,
         scheduler=engine.scheduler,
         stats=engine.stats,
-        workers=[(w.wid, w.busy_until, w.idle, w.mesh)
+        workers=[(w.wid, w.busy_until, w.idle, w.mesh, w.failures,
+                  w.times_quarantined, w.quarantined_until)
                  for w in engine.workers],
         waiters=engine.aggregator.waiters,
         killed=engine.aggregator.killed,
@@ -133,8 +144,49 @@ def capture_session(engine, service: Optional[Dict[str, Any]] = None
     )
 
 
+def migrate_session(state: SessionState) -> SessionState:
+    """Upgrade an older readable snapshot to the current format in place.
+
+    * v2 worker rows ``(wid, busy, idle)`` gain ``mesh=None`` (thread
+      workers — the only kind v2 could express),
+    * v3 rows ``(wid, busy, idle, mesh)`` gain a clean fault record,
+    * a pickled ``EngineStats``/``StudyStats`` restores ``__dict__``
+      as-was, so fields added since the snapshot are simply absent —
+      fill every missing field with its dataclass default.
+
+    v1 predates versioned stats migration and stays rejected."""
+    from repro.core.engine.engine import EngineStats, StudyStats
+
+    if state.version not in (2, 3, SESSION_FORMAT_VERSION):
+        raise ValueError(
+            f"session format v{state.version} is not migratable to "
+            f"v{SESSION_FORMAT_VERSION} — re-snapshot with a matching "
+            "repro version")
+    rows = []
+    for row in state.workers:
+        row = tuple(row)
+        if len(row) == 3:                      # v2: (wid, busy, idle)
+            row += (None,)
+        if len(row) == 4:                      # v3: ... + mesh
+            row += (0, 0, 0.0)
+        rows.append(row)
+    state.workers = rows
+    defaults = EngineStats()
+    for f in defaults.__dataclass_fields__:
+        if not hasattr(state.stats, f):
+            setattr(state.stats, f, getattr(defaults, f))
+    sdefaults = StudyStats()
+    for ss in state.stats.by_study.values():
+        for f in sdefaults.__dataclass_fields__:
+            if not hasattr(ss, f):
+                setattr(ss, f, getattr(sdefaults, f))
+    state.version = SESSION_FORMAT_VERSION
+    return state
+
+
 def restore_engine(state: SessionState, backend: TrainerBackend,
-                   store: Optional[CheckpointStore] = None):
+                   store: Optional[CheckpointStore] = None,
+                   fault_injector=None):
     """Rebuild a live engine from ``state`` + a fresh backend/store.
 
     The restored engine continues the exact event stream of the captured
@@ -142,13 +194,11 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
     Plan checkpoint entries the supplied store cannot serve are forgotten
     eagerly (recompute-on-miss, applied up front), so a store that lost
     blobs since the snapshot degrades to recomputation instead of
-    KeyErrors."""
+    KeyErrors.  Older snapshot formats are migrated forward (see
+    :func:`migrate_session`)."""
     from repro.core.engine.engine import ExecutionEngine  # cycle-free import
 
-    if state.version != SESSION_FORMAT_VERSION:
-        raise ValueError(
-            f"session format v{state.version} is not v{SESSION_FORMAT_VERSION}"
-            " — re-snapshot with the matching repro version")
+    migrate_session(state)
     if store is None:
         store = CheckpointStore()
     if state.store_mem is not None and not store.directory:
@@ -160,7 +210,8 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
         store=store, share=state.share,
         max_steps_per_chain=state.max_steps_per_chain,
         batch_siblings=state.batch_siblings, chain_fusion=state.chain_fusion,
-        worker_meshes=[mesh for (_, _, _, mesh) in state.workers])
+        worker_meshes=[row[3] for row in state.workers],
+        fault_injector=fault_injector)
 
     # splice the captured session state into the freshly wired components —
     # the dispatcher/aggregator hold references, so patch both sides
@@ -172,8 +223,11 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
     eng.aggregator.stats = state.stats
     eng.aggregator.waiters = state.waiters
     eng.aggregator.killed = state.killed
-    for w, (wid, busy_until, idle, mesh) in zip(eng.workers, state.workers):
+    for w, (wid, busy_until, idle, mesh, fails, quars, quntil) in zip(
+            eng.workers, state.workers):
         w.wid, w.busy_until, w.idle, w.mesh = wid, busy_until, idle, mesh
+        w.failures, w.times_quarantined = fails, quars
+        w.quarantined_until = quntil
     eng._trials = state.trials
     eng._handles = state.handles
     eng._study_trials = state.study_trials
@@ -194,11 +248,24 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
 
 # ---------------------------------------------------------------- file I/O
 def save_session(state: SessionState, path: str) -> str:
-    """Atomically pickle ``state`` to ``path`` (tmp + rename)."""
-    tmp = f"{path}.tmp"
-    with open(tmp, "wb") as f:
-        pickle.dump(state, f)
-    os.replace(tmp, path)
+    """Atomically pickle ``state`` to ``path`` (tmp + rename).
+
+    The tmp name is pid/thread-unique (like the checkpoint store's):
+    overlapping snapshotters — a rolling restart where old and new
+    processes both snapshot the same path — each write their own tmp and
+    the rename race resolves to one complete snapshot instead of
+    interleaved writes publishing a corrupt one."""
+    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+    try:
+        with open(tmp, "wb") as f:
+            pickle.dump(state, f)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path
 
 
@@ -208,3 +275,84 @@ def load_session(path: str) -> SessionState:
     if not isinstance(state, SessionState):
         raise ValueError(f"{path!r} is not a repro session snapshot")
     return state
+
+
+# ----------------------------------------------------- rotated snapshots
+def _pid_alive(pid: int) -> bool:
+    if pid == os.getpid():
+        return True
+    try:
+        os.kill(pid, 0)                # signal 0: existence probe only
+        return True
+    except ProcessLookupError:
+        return False
+    except OSError:
+        return True                    # EPERM etc: exists, not ours
+
+
+def session_rotation(base: str) -> List[Tuple[int, str]]:
+    """Existing rotation slots ``base.<seq>``, newest (highest seq) first."""
+    d = os.path.dirname(os.path.abspath(base))
+    prefix = os.path.basename(base) + "."
+    out = []
+    try:
+        names = os.listdir(d)
+    except OSError:
+        return []
+    for name in names:
+        suffix = name[len(prefix):] if name.startswith(prefix) else ""
+        if suffix.isdigit():
+            out.append((int(suffix), os.path.join(d, name)))
+    return sorted(out, reverse=True)
+
+
+def save_session_rotated(state: SessionState, base: str,
+                         keep: int = 3) -> str:
+    """Write the next rotation slot ``base.<seq>`` atomically and prune
+    slots beyond the newest ``keep`` — the continuous-durability sink of
+    ``serve_studies --snapshot-every``.  Readers (:func:`load_latest_session`)
+    fall back through the rotation, so a crash mid-write (torn tmp, or a
+    SIGKILL between write and rename) costs one slot, never the session."""
+    slots = session_rotation(base)
+    seq = (slots[0][0] + 1) if slots else 1
+    path = save_session(state, f"{base}.{seq}")
+    for _, stale in slots[max(0, keep - 1):]:
+        try:
+            os.unlink(stale)
+        except OSError:
+            pass
+    # sweep orphaned tmps of DEAD snapshotters (best-effort) — the tmp
+    # name embeds the writer's pid, so a live concurrent writer (rolling
+    # restart: old and new process both snapshotting) keeps its in-flight
+    # tmp and its os.replace still lands
+    d = os.path.dirname(os.path.abspath(base))
+    prefix = os.path.basename(base) + "."
+    for name in os.listdir(d):
+        if not (name.startswith(prefix) and ".tmp." in name):
+            continue
+        pid_s = name.rsplit(".tmp.", 1)[1].split(".", 1)[0]
+        if pid_s.isdigit() and _pid_alive(int(pid_s)):
+            continue
+        try:
+            os.unlink(os.path.join(d, name))
+        except OSError:
+            pass
+    return path
+
+
+def load_latest_session(base: str) -> Tuple[SessionState, str]:
+    """(state, path) from the newest *readable* rotation slot of ``base``.
+
+    A truncated, corrupt or non-snapshot newest slot (the process died
+    mid-publish, disk lost a tail) falls back to the previous slot —
+    restore loses at most one snapshot interval.  Raises
+    ``FileNotFoundError`` when no slot is readable."""
+    failures = []
+    for _, path in session_rotation(base):
+        try:
+            return load_session(path), path
+        except Exception as exc:  # truncation, bad pickle, foreign file
+            failures.append(f"{path}: {type(exc).__name__}: {exc}")
+    detail = ("; unreadable: " + "; ".join(failures)) if failures else ""
+    raise FileNotFoundError(
+        f"no readable session snapshot in rotation {base!r}.N{detail}")

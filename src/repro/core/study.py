@@ -45,8 +45,9 @@ from typing import List, Optional, Sequence, Tuple, Union
 from repro.core.db import SearchPlanDB, study_key
 from repro.core.engine import (EngineStats, ExecutionEngine, StudyStats,
                                Tuner)
-from repro.core.engine.session import (capture_session, load_session,
-                                       restore_engine, save_session)
+from repro.core.engine.session import (capture_session, load_latest_session,
+                                       load_session, restore_engine,
+                                       save_session, save_session_rotated)
 from repro.core.scheduler import (CriticalPathScheduler, SchedulingPolicy,
                                   make_policy)
 from repro.core.trainer import TrainerBackend
@@ -120,7 +121,8 @@ class Study:
                max_steps_per_chain: Optional[int] = None,
                batch_siblings: Optional[bool] = None,
                chain_fusion: Optional[bool] = None,
-               worker_meshes: Optional[Sequence] = None) -> ExecutionEngine:
+               worker_meshes: Optional[Sequence] = None,
+               fault_injector=None) -> ExecutionEngine:
         """``policy`` selects the scheduling policy by name ("critical_path",
         "weighted_fanout", "fifo", "fair_share") or instance; the legacy
         ``weighted_paths`` flag is kept as a shorthand for the default.
@@ -129,7 +131,9 @@ class Study:
         carries + write-behind boundary checkpoints) on/off (defaults:
         whatever the backend supports).  ``worker_meshes`` gives workers
         device sets (:class:`repro.dist.meshes.WorkerMesh`; None entries =
-        thread workers)."""
+        thread workers).  ``fault_injector`` (a
+        :class:`repro.core.faults.FaultInjector`) wraps the backend and
+        store in the deterministic fault plane."""
         return ExecutionEngine(
             self.db.get(self.key), backend, n_workers=n_workers,
             gpus_per_worker=gpus_per_worker,
@@ -137,7 +141,7 @@ class Study:
             store=store, share=share,
             max_steps_per_chain=max_steps_per_chain,
             batch_siblings=batch_siblings, chain_fusion=chain_fusion,
-            worker_meshes=worker_meshes)
+            worker_meshes=worker_meshes, fault_injector=fault_injector)
 
     def run(self, tuner: Tuner, backend: TrainerBackend, n_workers: int = 4,
             **kw) -> EngineStats:
@@ -236,7 +240,8 @@ class StudyService:
                  max_steps_per_chain: Optional[int] = None,
                  batch_siblings: Optional[bool] = None,
                  chain_fusion: Optional[bool] = None,
-                 worker_meshes: Optional[Sequence] = None):
+                 worker_meshes: Optional[Sequence] = None,
+                 fault_injector=None):
         self.db = db
         self.backend = backend
         self.n_workers = n_workers
@@ -248,10 +253,14 @@ class StudyService:
         self.batch_siblings = batch_siblings
         self.chain_fusion = chain_fusion
         self.worker_meshes = worker_meshes
+        self.fault_injector = fault_injector
         self._engine: Optional[ExecutionEngine] = None
         self._key: Optional[str] = None
         self._futures: List[StudyFuture] = []
         self._closed = False
+        # continuous durability (enable_auto_snapshot): (base, every, keep)
+        self._auto_snapshot: Optional[Tuple[str, float, int]] = None
+        self._next_snapshot_due: Optional[float] = None
 
     # ------------------------------------------------------------ properties
     @property
@@ -296,7 +305,8 @@ class StudyService:
                 max_steps_per_chain=self.max_steps_per_chain,
                 batch_siblings=self.batch_siblings,
                 chain_fusion=self.chain_fusion,
-                worker_meshes=self.worker_meshes)
+                worker_meshes=self.worker_meshes,
+                fault_injector=self.fault_injector)
         elif key != self._key:
             raise ValueError(
                 f"study key {key!r} differs from this session's {self._key!r}"
@@ -337,6 +347,7 @@ class StudyService:
         if self._engine is None or not self._engine.step():
             return False
         self._refresh_futures()
+        self._maybe_auto_snapshot()
         return True
 
     def run_until(self, t: float) -> None:
@@ -394,6 +405,47 @@ class StudyService:
                 fut.status = "done"
 
     # ----------------------------------------------------------- persistence
+    def enable_auto_snapshot(self, base: str, every: float,
+                             keep: int = 3) -> None:
+        """Continuous durability: after the first event past each
+        ``every`` virtual seconds, write an atomic rotated snapshot
+        ``base.<seq>`` keeping the newest ``keep`` (see
+        :func:`~repro.core.engine.session.save_session_rotated`).  With
+        :meth:`restore_latest` on startup, a SIGKILL at any instant loses
+        at most one interval of progress."""
+        if every <= 0:
+            raise ValueError(f"snapshot interval must be > 0, got {every}")
+        self._auto_snapshot = (base, float(every), int(keep))
+        self._next_snapshot_due = None   # first step() aligns to the clock
+
+    def _maybe_auto_snapshot(self) -> None:
+        if self._auto_snapshot is None or self._engine is None:
+            return
+        base, every, keep = self._auto_snapshot
+        if self._next_snapshot_due is None:
+            # align the schedule to interval boundaries so a restored
+            # session continues the same cadence its snapshot recorded
+            self._next_snapshot_due = (self.time // every + 1) * every
+        if self.time < self._next_snapshot_due:
+            return
+        self.snapshot_rotated()
+        while self._next_snapshot_due <= self.time:
+            self._next_snapshot_due += every
+
+    def snapshot_rotated(self) -> str:
+        """One rotated snapshot now (the timer path calls this; callers
+        may too, e.g. a graceful-shutdown handler).  Requires
+        :meth:`enable_auto_snapshot`."""
+        if self._auto_snapshot is None:
+            raise RuntimeError("call enable_auto_snapshot(base, every) first")
+        if self._engine is None:
+            raise RuntimeError("nothing submitted yet — snapshot is empty")
+        base, every, keep = self._auto_snapshot
+        state = capture_session(
+            self._engine, service={"futures": self._futures,
+                                   "auto_snapshot": self._auto_snapshot})
+        return save_session_rotated(state, base, keep=keep)
+
     def snapshot(self, path: str) -> str:
         """Persist the complete session (durable point-in-time state; see
         :mod:`repro.core.engine.session` for the format).  Flushes the
@@ -407,16 +459,37 @@ class StudyService:
 
     @classmethod
     def restore(cls, db: SearchPlanDB, path: str, backend: TrainerBackend,
-                store: Optional[CheckpointStore] = None) -> "StudyService":
+                store: Optional[CheckpointStore] = None,
+                fault_injector=None) -> "StudyService":
         """Revive a snapshotted session against a fresh backend/store.
 
         The restored session continues the exact event stream captured by
         :meth:`snapshot` — final stats (including the per-study breakdown)
         match an uninterrupted run.  Plan checkpoints the supplied store
         cannot serve (writes after the snapshot's flush barrier, external
-        evictions) are forgotten eagerly and recomputed on demand."""
-        state = load_session(path)
-        eng = restore_engine(state, backend, store)
+        evictions) are forgotten eagerly and recomputed on demand.  Older
+        snapshot formats (v2/v3) are migrated forward on the fly."""
+        return cls._restore_state(db, load_session(path), backend, store,
+                                  fault_injector)
+
+    @classmethod
+    def restore_latest(cls, db: SearchPlanDB, base: str,
+                       backend: TrainerBackend,
+                       store: Optional[CheckpointStore] = None,
+                       fault_injector=None) -> "StudyService":
+        """:meth:`restore` from the newest *readable* rotation slot of
+        ``base`` (``enable_auto_snapshot``'s output), falling back through
+        corrupt/truncated slots; re-enables the captured auto-snapshot
+        cadence.  Raises ``FileNotFoundError`` when no slot is readable."""
+        state, _ = load_latest_session(base)
+        return cls._restore_state(db, state, backend, store, fault_injector)
+
+    @classmethod
+    def _restore_state(cls, db: SearchPlanDB, state, backend: TrainerBackend,
+                       store: Optional[CheckpointStore],
+                       fault_injector) -> "StudyService":
+        eng = restore_engine(state, backend, store,
+                             fault_injector=fault_injector)
         db.put(state.plan_key, state.plan)
         svc = cls(db, backend, n_workers=state.n_workers,
                   gpus_per_worker=state.gpus_per_worker, share=state.share,
@@ -424,12 +497,16 @@ class StudyService:
                   max_steps_per_chain=state.max_steps_per_chain,
                   batch_siblings=state.batch_siblings,
                   chain_fusion=state.chain_fusion,
-                  worker_meshes=[m for (_, _, _, m) in state.workers])
+                  worker_meshes=[row[3] for row in state.workers],
+                  fault_injector=fault_injector)
         svc._engine = eng
         svc._key = state.plan_key
         svc._futures = list(state.service.get("futures", []))
         for fut in svc._futures:
             fut.service = svc
+        auto = state.service.get("auto_snapshot")
+        if auto:
+            svc.enable_auto_snapshot(*auto)
         return svc
 
 

@@ -20,8 +20,12 @@ swap ``SimulatedTrainer`` for ``JaxTrainer`` to serve real training.
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
+import time
 
-from repro.core import SearchPlanDB, StudyService, StudySpec
+from repro.core import FaultInjector, SearchPlanDB, StudyService, StudySpec
+from repro.core.engine import session_rotation
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridSearchSpace, GridTuner
 from repro.core.hpseq import Constant, Exponential, MultiStep, StepLR, Warmup
@@ -65,6 +69,13 @@ def _report(stats) -> None:
         print(f"mesh plane: {stats.mesh_placements} mesh placements, "
               f"{stats.placement_rejections} rejections, "
               f"{stats.d2d_handoffs} d2d handoffs")
+    if stats.stage_failures or stats.faults_injected:
+        print(f"fault plane: {stats.faults_injected} faults injected, "
+              f"{stats.stage_failures} stage failures, "
+              f"{stats.stage_retries} retries, "
+              f"{stats.groups_degraded} groups degraded, "
+              f"{stats.workers_quarantined} quarantines, "
+              f"{stats.wasted_gpu_seconds / 3600:.2f} GPU-h wasted")
     for sid, ss in sorted(stats.by_study.items()):
         print(f"  {sid}: {ss.gpu_seconds / 3600:7.1f} GPU-h  "
               f"{ss.steps_run:6d} steps served  "
@@ -101,6 +112,25 @@ def main() -> None:
     ap.add_argument("--snapshot-at", type=float, default=None,
                     help="virtual time to snapshot at; the live session is "
                          "then discarded and the run finishes via restore")
+    ap.add_argument("--snapshot-every", type=float, default=None,
+                    help="continuous durability: rotate a session snapshot "
+                         "to --session every T virtual seconds; on startup "
+                         "the service resumes from the newest readable "
+                         "rotation slot (a SIGKILL loses at most one "
+                         "interval)")
+    ap.add_argument("--snapshot-keep", type=int, default=3,
+                    help="rotation slots kept by --snapshot-every")
+    ap.add_argument("--inject-faults", type=int, default=None, metavar="SEED",
+                    help="deterministic fault injection: worker crashes, "
+                         "transient stage failures and store outages drawn "
+                         "from this seed (same seed => same fault schedule)")
+    ap.add_argument("--fault-rates", default="0.05,0.02,0.01",
+                    metavar="STAGE,CRASH,OUTAGE",
+                    help="per-draw probabilities used by --inject-faults")
+    ap.add_argument("--throttle", type=float, default=0.0,
+                    help="wall seconds to sleep between engine steps "
+                         "(paces the virtual-time simulator for demos and "
+                         "for exercising the signal handlers)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="directory for the checkpoint plane (enables "
                          "delta-encoded durable checkpoints; default: "
@@ -127,20 +157,58 @@ def main() -> None:
         # it would be silently ignored
         ap.error("--disk-capacity-mb requires --remote-dir")
 
+    if args.snapshot_every is not None and not args.session:
+        ap.error("--snapshot-every requires --session PATH")
+
     def backend():
         return SimulatedTrainer(base_seconds_per_step=args.sec_per_step,
                                 horizon=args.steps)
 
+    def injector():
+        if args.inject_faults is None:
+            return None
+        stage, crash, outage = (float(x) for x
+                                in args.fault_rates.split(","))
+        return FaultInjector(args.inject_faults, stage_fault_rate=stage,
+                             crash_rate=crash, outage_rate=outage)
+
     meshes = (plan_worker_meshes(args.workers, args.devices_per_worker,
                                  host=args.mesh_host)
               if args.devices_per_worker > 0 else None)
-    db = SearchPlanDB()
-    svc = StudyService(db, backend(), n_workers=args.workers,
-                       policy=args.policy, store=_build_store(args),
-                       worker_meshes=meshes)
-    _submit_all(svc, args)
+    restored = False
+    if args.session and session_rotation(args.session):
+        # a prior --snapshot-every run left rotated snapshots: resume from
+        # the newest readable slot instead of recomputing (the restored
+        # state carries the pending futures AND the snapshot cadence)
+        svc = StudyService.restore_latest(SearchPlanDB(), args.session,
+                                          backend(), store=_build_store(args),
+                                          fault_injector=injector())
+        restored = True
+        print(f"restored session at t={svc.time:.0f}s from newest "
+              f"rotation slot ({len(svc.futures)} studies attached)")
+    else:
+        db = SearchPlanDB()
+        svc = StudyService(db, backend(), n_workers=args.workers,
+                           policy=args.policy, store=_build_store(args),
+                           worker_meshes=meshes,
+                           fault_injector=injector())
+        _submit_all(svc, args)
+    if args.snapshot_every is not None:
+        svc.enable_auto_snapshot(args.session, args.snapshot_every,
+                                 keep=args.snapshot_keep)
 
-    if args.snapshot_at is not None:
+    # graceful shutdown: SIGTERM/SIGINT finish the current engine step,
+    # snapshot the session to --session, and exit cleanly — a supervisor's
+    # rolling restart then resumes via the startup restore above
+    shutdown = {"sig": None}
+
+    def _on_signal(signum, frame):
+        shutdown["sig"] = signum
+
+    prev_handlers = {s: signal.signal(s, _on_signal)
+                     for s in (signal.SIGTERM, signal.SIGINT)}
+
+    if args.snapshot_at is not None and not restored:
         if not args.session:
             ap.error("--snapshot-at requires --session PATH")
         svc.run_until(args.snapshot_at)
@@ -154,8 +222,34 @@ def main() -> None:
         # demoted to remote) are re-indexed at init and picked up by the
         # restore's eager recompute-on-miss check
         svc = StudyService.restore(SearchPlanDB(), args.session, backend(),
-                                   store=_build_store(args))
+                                   store=_build_store(args),
+                                   fault_injector=injector())
 
+    try:
+        while svc.step():
+            if args.throttle:
+                time.sleep(args.throttle)
+            if shutdown["sig"] is not None:
+                name = signal.Signals(shutdown["sig"]).name
+                if args.session:
+                    # with rotation on, the final snapshot must become the
+                    # newest slot — restore_latest only scans slots, so a
+                    # plain base-path write would be ignored on restart
+                    if args.snapshot_every is not None:
+                        path = svc.snapshot_rotated()
+                    else:
+                        path = svc.snapshot(args.session)
+                    print(f"{name}: final snapshot at t={svc.time:.0f}s "
+                          f"-> {path}; exiting")
+                else:
+                    print(f"{name}: no --session configured, exiting "
+                          "without a snapshot")
+                sys.exit(0)
+    finally:
+        # main() runs in-process under the launcher tests: put the
+        # process's previous handlers back
+        for s, h in prev_handlers.items():
+            signal.signal(s, h)
     stats = svc.close()
     _report(stats)
 
