@@ -1,0 +1,140 @@
+"""Front-door benchmark: rebalanced shared fleet vs static partition.
+
+Mixed-key staggered traffic — three plan keys whose demand peaks at
+different times — served two ways over the same 8-worker fleet:
+
+* **static**: the operator pre-partitions the fleet per key (the best
+  guess available before traffic arrives: near-equal shares) and each
+  key runs its own :class:`StudyService`.  Workers parked on a key whose
+  studies haven't arrived yet — or have already drained — idle while
+  another key's queue is deep.
+* **rebalanced**: one :class:`~repro.frontdoor.StudyGateway` owns the
+  fleet and leases workers to whichever sessions have live demand,
+  revoking at chain boundaries as forests drain.
+
+Both configurations run identical per-key stage forests (admission per
+key is the same), so the comparison isolates the lease manager: the
+makespan gap is pure fleet-shape adaptation.  All times are virtual
+(SimulatedTrainer), so rows are machine-independent and the trend gate
+(``check_frontdoor_trend.py``) can hold tight bounds.  Rows land in
+``BENCH_frontdoor.json`` via ``benchmarks/run.py`` (CI artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.spaces import resnet20_space_high_merge
+from repro.core import SearchPlanDB, StudyService, StudySpec
+from repro.core.trainer import SimulatedTrainer
+from repro.core.tuners import GridTuner
+from repro.frontdoor import StudyGateway
+
+N_WORKERS = 8
+MAX_STEPS = 160
+SEC_PER_STEP = 60.0
+
+# three keys whose demand peaks in distinct phases (arrival gaps on the
+# order of a phase's full-fleet drain time): while key 0's forest is the
+# only live demand a static partition can use just its own share of the
+# fleet and parks the rest on keys whose studies haven't arrived — the
+# gateway leases the whole fleet to whoever is busy *now*
+TRAFFIC = [
+    (StudySpec("resnet20", "cifar10", ("lr", "bs")),
+     [0.0, 1800.0, 3600.0]),
+    (StudySpec("wrn28", "cifar10", ("lr", "bs")),
+     [100_000.0, 101_800.0]),
+    (StudySpec("vgg16", "cifar10", ("lr", "bs")),
+     [200_000.0]),
+]
+
+
+def _backend():
+    return SimulatedTrainer(base_seconds_per_step=SEC_PER_STEP,
+                            horizon=MAX_STEPS, load_seconds=30.0,
+                            save_seconds=30.0, eval_seconds=60.0)
+
+
+def _tuners():
+    """seed -> tuner, seeded per (key, arrival) so spaces differ."""
+    out = []
+    seed = 0
+    for spec, arrivals in TRAFFIC:
+        for at in arrivals:
+            out.append((spec, at,
+                        GridTuner(resnet20_space_high_merge(
+                            seed=seed).trials(MAX_STEPS))))
+            seed += 1
+    return out
+
+
+def _partition(n: int, k: int):
+    """Near-equal static split: the fairest guess with no traffic model."""
+    base, extra = divmod(n, k)
+    return [base + (1 if i < extra else 0) for i in range(k)]
+
+
+def run_static():
+    """One fixed-size service per key; fleet pre-partitioned."""
+    shares = _partition(N_WORKERS, len(TRAFFIC))
+    t0 = time.perf_counter()
+    per_key = []
+    for (spec, _), n in zip(TRAFFIC, shares):
+        svc = StudyService(SearchPlanDB(), _backend(), n_workers=n)
+        for s, at, tuner in _tuners():
+            if s.key == spec.key:
+                svc.submit(spec, tuner, at=at)
+        per_key.append(svc.close())
+    wall = time.perf_counter() - t0
+    return per_key, wall
+
+
+def run_rebalanced():
+    """One gateway, one fleet, leases follow demand."""
+    t0 = time.perf_counter()
+    gw = StudyGateway(SearchPlanDB(), _backend(), n_slots=N_WORKERS)
+    for spec, at, tuner in _tuners():
+        gw.submit(spec, tuner, at=at)
+    archive = gw.close()
+    wall = time.perf_counter() - t0
+    return [stats for _, stats in archive], wall
+
+
+def _row(config: str, per_key, wall: float) -> dict:
+    return {
+        "config": config,
+        "workers": N_WORKERS,
+        "keys": len(TRAFFIC),
+        "studies": sum(len(s.by_study) for s in per_key),
+        # arrivals are absolute virtual times, so each session's
+        # end_to_end IS its drain time; the deployment's makespan is the
+        # latest drain across keys
+        "makespan_s": round(max(s.end_to_end for s in per_key), 1),
+        "gpu_seconds": round(sum(s.gpu_seconds for s in per_key), 1),
+        "steps_run": sum(s.steps_run for s in per_key),
+        "wall_s": round(wall, 4),
+    }
+
+
+def dump_json(rows, path: str = "BENCH_frontdoor.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"bench": "frontdoor", "rows": rows}, f, indent=2)
+    print(f"[wrote {path}]")
+
+
+def main():
+    rows = [_row("static", *run_static()),
+            _row("rebalanced", *run_rebalanced())]
+    print("config,workers,studies,makespan_s,gpu_seconds,steps_run")
+    for r in rows:
+        print(f"{r['config']},{r['workers']},{r['studies']},"
+              f"{r['makespan_s']},{r['gpu_seconds']},{r['steps_run']}")
+    static, reb = rows
+    print(f"# rebalanced speedup: "
+          f"{static['makespan_s'] / reb['makespan_s']:.2f}x makespan")
+    return rows
+
+
+if __name__ == "__main__":
+    dump_json(main())

@@ -1,0 +1,80 @@
+"""CI trend gate for the front door (mirrors check_meshplane_trend).
+
+Compares the current ``BENCH_frontdoor.json`` against the committed
+baseline (``benchmarks/baseline_frontdoor.json``) and fails when:
+
+* either configuration lost studies (``studies`` shrank) — the gateway
+  must serve everything the static deployment serves;
+* total ``gpu_seconds``/``steps_run`` differ between the two configs —
+  both run identical per-key stage forests, so any gap means the lease
+  plane changed *what* ran, not just *where*;
+* the rebalanced fleet stops beating the static partition by at least
+  ``SPEEDUP_FLOOR`` on makespan — the front door's reason to exist;
+* the rebalanced makespan regresses more than ``MAKESPAN_THRESHOLD``
+  vs the baseline.  All times are virtual (simulator), so this bound
+  is machine-independent and deliberately tight.
+
+Usage: ``python benchmarks/check_frontdoor_trend.py [current] [baseline]``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SPEEDUP_FLOOR = 1.10        # min static/rebalanced makespan ratio
+MAKESPAN_THRESHOLD = 1.02   # max rebalanced-makespan growth vs baseline
+
+
+def _row(rows, config: str) -> dict:
+    for r in rows:
+        if r["config"] == config:
+            return r
+    raise SystemExit(f"benchmark row {config!r} missing")
+
+
+def main(current_path: str = "BENCH_frontdoor.json",
+         baseline_path: str = "benchmarks/baseline_frontdoor.json") -> None:
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+
+    static, reb = _row(cur, "static"), _row(cur, "rebalanced")
+    base_reb = _row(base, "rebalanced")
+
+    for r in cur:
+        if r["studies"] < _row(base, r["config"])["studies"]:
+            raise SystemExit(
+                f"{r['config']}: served {r['studies']} studies, baseline "
+                f"served {_row(base, r['config'])['studies']} — work lost")
+
+    # identical logical work: the lease plane only moves workers
+    for field in ("gpu_seconds", "steps_run"):
+        if static[field] != reb[field]:
+            raise SystemExit(
+                f"{field} differs between configs (static {static[field]}, "
+                f"rebalanced {reb[field]}) — rebalancing changed the "
+                "forests, not just the fleet shape")
+
+    speedup = static["makespan_s"] / reb["makespan_s"]
+    if speedup < SPEEDUP_FLOOR:
+        raise SystemExit(
+            f"rebalanced makespan speedup {speedup:.2f}x is below the "
+            f"{SPEEDUP_FLOOR:.2f}x floor (static {static['makespan_s']}s, "
+            f"rebalanced {reb['makespan_s']}s)")
+
+    growth = reb["makespan_s"] / base_reb["makespan_s"]
+    if growth > MAKESPAN_THRESHOLD:
+        raise SystemExit(
+            f"rebalanced makespan regressed {growth:.3f}x vs baseline "
+            f"({base_reb['makespan_s']}s -> {reb['makespan_s']}s; virtual "
+            f"time, so this is a scheduling change, not machine noise)")
+
+    print(f"frontdoor trend OK: speedup {speedup:.2f}x "
+          f"(floor {SPEEDUP_FLOOR:.2f}x), rebalanced makespan "
+          f"{reb['makespan_s']}s vs baseline {base_reb['makespan_s']}s")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:3])

@@ -8,9 +8,11 @@ in ``BENCH_dataplane.json`` (gated by ``check_dataplane_trend.py``), the
 Pallas kernel rows in ``BENCH_kernels.json``, the checkpoint-plane rows
 in ``BENCH_ckptplane.json`` (gated by ``check_ckptplane_trend.py``), the
 mesh-plane fleet sweep in ``BENCH_meshplane.json`` (gated by
-``check_meshplane_trend.py``) and the multi-study upfront/staggered rows
-in ``BENCH_multistudy.json``, so the perf trajectory is tracked across
-PRs (CI uploads all six as artifacts).
+``check_meshplane_trend.py``), the front-door fleet comparison in
+``BENCH_frontdoor.json`` (gated by ``check_frontdoor_trend.py``) and the
+multi-study upfront/staggered rows in ``BENCH_multistudy.json``, so the
+perf trajectory is tracked across PRs (CI uploads all seven as
+artifacts).
 """
 
 from __future__ import annotations
@@ -26,7 +28,8 @@ def dump_stagetree_json(rows, path: str = "BENCH_stagetree.json") -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_ckptplane, bench_dataplane, bench_kernels,
+    from benchmarks import (bench_ckptplane, bench_dataplane,
+                            bench_frontdoor, bench_kernels,
                             bench_merge_rate, bench_meshplane,
                             bench_multi_study, bench_single_study,
                             bench_stagetree)
@@ -42,6 +45,8 @@ def main() -> None:
          "sibling-heavy forest", bench_ckptplane),
         ("mesh plane: group-width x mesh-width fleet sweep + d2d handoff",
          bench_meshplane),
+        ("front door: rebalanced shared fleet vs static partition",
+         bench_frontdoor),
         ("single-study: trial vs stage (Figure 12 / Table 5)",
          bench_single_study),
         ("multi-study S1/S2/S4/S8 + staggered service (Figures 13-14)",

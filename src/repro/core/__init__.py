@@ -20,5 +20,5 @@ from repro.core.faults import (FatalStageError, FaultError, FaultInjector,
 from repro.core.trainer import SimulatedTrainer, StageContext, TrainerBackend
 from repro.core.db import SearchPlanDB, study_key
 from repro.core.merge import k_wise_merge_rate, merge_rate, total_steps, unique_steps
-from repro.core.study import (Study, StudyFuture, StudyService, StudySpec,
-                              run_studies)
+from repro.core.study import (PlanKeyMismatch, Study, StudyFuture,
+                              StudyService, StudySpec, run_studies)

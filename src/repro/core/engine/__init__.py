@@ -25,10 +25,11 @@ from repro.core.engine.session import (SessionState, capture_session,
                                        load_latest_session, load_session,
                                        migrate_session, restore_engine,
                                        save_session, save_session_rotated,
-                                       session_rotation)
+                                       session_rotation, sweep_session_tmps)
 
 __all__ = ["ExecutionEngine", "Tuner", "StudyHandle", "EngineStats",
            "StudyStats", "Event", "EventLoop", "Dispatcher", "Worker",
            "Aggregator", "SessionState", "capture_session", "restore_engine",
            "migrate_session", "save_session", "load_session",
-           "save_session_rotated", "load_latest_session", "session_rotation"]
+           "save_session_rotated", "load_latest_session", "session_rotation",
+           "sweep_session_tmps"]

@@ -57,7 +57,7 @@ from repro.train.checkpoint import CheckpointStore
 __all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
            "restore_engine", "migrate_session", "save_session",
            "load_session", "save_session_rotated", "load_latest_session",
-           "session_rotation"]
+           "session_rotation", "sweep_session_tmps"]
 
 # v2: EngineStats grew the checkpoint-plane v2 counters (delta/full bytes,
 # per-tier hits, promotions/demotions) — v1 snapshots lack the fields and
@@ -71,7 +71,14 @@ __all__ = ["SessionState", "SESSION_FORMAT_VERSION", "capture_session",
 # stats fields -> dataclass defaults) — rolling upgrades keep old
 # snapshots restorable.  v1 predates the versioned stats migration and
 # stays rejected.
-SESSION_FORMAT_VERSION = 4
+# v5: the on-disk envelope is no longer a bare pickle — it is the
+# schema'd container of :mod:`repro.frontdoor.snapshot_v5` (8-byte
+# length-prefixed JSON manifest + digest-verified typed/pickle records,
+# the checkpoint plane's blob conventions), worker tuples carry the
+# front-door ``draining`` flag, and a gateway envelope can nest one
+# session record per plan key.  v2-v4 *pickle* files remain readable
+# (forward migration: sniffed by magic byte, then migrated as before).
+SESSION_FORMAT_VERSION = 5
 
 
 @dataclass
@@ -95,7 +102,8 @@ class SessionState:
     workers: List[Tuple]                         # (wid, busy_until, idle,
                                                  #  WorkerMesh | None,
                                                  #  failures, times_quar.,
-                                                 #  quarantined_until)
+                                                 #  quarantined_until,
+                                                 #  draining)
     waiters: Dict[Tuple[str, int], List[Tuple[Any, Any]]]
     killed: Set[str]
     trials: Dict[str, Any]
@@ -129,7 +137,7 @@ def capture_session(engine, service: Optional[Dict[str, Any]] = None
         scheduler=engine.scheduler,
         stats=engine.stats,
         workers=[(w.wid, w.busy_until, w.idle, w.mesh, w.failures,
-                  w.times_quarantined, w.quarantined_until)
+                  w.times_quarantined, w.quarantined_until, w.draining)
                  for w in engine.workers],
         waiters=engine.aggregator.waiters,
         killed=engine.aggregator.killed,
@@ -150,6 +158,7 @@ def migrate_session(state: SessionState) -> SessionState:
     * v2 worker rows ``(wid, busy, idle)`` gain ``mesh=None`` (thread
       workers — the only kind v2 could express),
     * v3 rows ``(wid, busy, idle, mesh)`` gain a clean fault record,
+    * v4 rows gain ``draining=False`` (no lease was being revoked),
     * a pickled ``EngineStats``/``StudyStats`` restores ``__dict__``
       as-was, so fields added since the snapshot are simply absent —
       fill every missing field with its dataclass default.
@@ -157,7 +166,7 @@ def migrate_session(state: SessionState) -> SessionState:
     v1 predates versioned stats migration and stays rejected."""
     from repro.core.engine.engine import EngineStats, StudyStats
 
-    if state.version not in (2, 3, SESSION_FORMAT_VERSION):
+    if state.version not in (2, 3, 4, SESSION_FORMAT_VERSION):
         raise ValueError(
             f"session format v{state.version} is not migratable to "
             f"v{SESSION_FORMAT_VERSION} — re-snapshot with a matching "
@@ -169,6 +178,8 @@ def migrate_session(state: SessionState) -> SessionState:
             row += (None,)
         if len(row) == 4:                      # v3: ... + mesh
             row += (0, 0, 0.0)
+        if len(row) == 7:                      # v4: ... + fault record
+            row += (False,)
         rows.append(row)
     state.workers = rows
     defaults = EngineStats()
@@ -223,11 +234,15 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
     eng.aggregator.stats = state.stats
     eng.aggregator.waiters = state.waiters
     eng.aggregator.killed = state.killed
-    for w, (wid, busy_until, idle, mesh, fails, quars, quntil) in zip(
-            eng.workers, state.workers):
+    for w, (wid, busy_until, idle, mesh, fails, quars, quntil,
+            draining) in zip(eng.workers, state.workers):
         w.wid, w.busy_until, w.idle, w.mesh = wid, busy_until, idle, mesh
         w.failures, w.times_quarantined = fails, quars
         w.quarantined_until = quntil
+        w.draining = draining
+    # ids keep growing where the captured fleet left off — a restored
+    # session's next lease grant must not collide with a live wid
+    eng._next_wid = 1 + max((row[0] for row in state.workers), default=-1)
     eng._trials = state.trials
     eng._handles = state.handles
     eng._study_trials = state.study_trials
@@ -247,18 +262,26 @@ def restore_engine(state: SessionState, backend: TrainerBackend,
 
 
 # ---------------------------------------------------------------- file I/O
-def save_session(state: SessionState, path: str) -> str:
-    """Atomically pickle ``state`` to ``path`` (tmp + rename).
+def save_session(state, path: str) -> str:
+    """Atomically write ``state`` to ``path`` (tmp + rename) in the v5
+    schema'd container format (:mod:`repro.frontdoor.snapshot_v5` — JSON
+    manifest + digest-verified records; ``state`` may be a
+    :class:`SessionState` or a gateway envelope).
 
     The tmp name is pid/thread-unique (like the checkpoint store's):
     overlapping snapshotters — a rolling restart where old and new
     processes both snapshot the same path — each write their own tmp and
     the rename race resolves to one complete snapshot instead of
     interleaved writes publishing a corrupt one."""
+    # the codec lives with the front door (it also encodes gateway
+    # envelopes); imported lazily to keep the engine package import-light
+    from repro.frontdoor.snapshot_v5 import encode_snapshot
+
+    data = encode_snapshot(state)
     tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
     try:
         with open(tmp, "wb") as f:
-            pickle.dump(state, f)
+            f.write(data)
         os.replace(tmp, path)
     except BaseException:
         try:
@@ -269,9 +292,18 @@ def save_session(state: SessionState, path: str) -> str:
     return path
 
 
-def load_session(path: str) -> SessionState:
+def load_session(path: str):
+    """Read a session (or gateway) snapshot — v5 schema'd container, or a
+    legacy v2-v4 pickle (sniffed by magic byte) migrated forward on
+    restore.  Digest mismatches in a v5 file raise ``ValueError`` so the
+    rotation reader falls back to the previous slot."""
+    from repro.frontdoor.snapshot_v5 import decode_snapshot, is_v5_snapshot
+
     with open(path, "rb") as f:
-        state = pickle.load(f)
+        data = f.read()
+    if is_v5_snapshot(data):
+        return decode_snapshot(data)
+    state = pickle.loads(data)                 # legacy: versioned pickle
     if not isinstance(state, SessionState):
         raise ValueError(f"{path!r} is not a repro session snapshot")
     return state
@@ -306,8 +338,37 @@ def session_rotation(base: str) -> List[Tuple[int, str]]:
     return sorted(out, reverse=True)
 
 
-def save_session_rotated(state: SessionState, base: str,
-                         keep: int = 3) -> str:
+def sweep_session_tmps(base: str) -> int:
+    """Sweep orphaned snapshot tmps of DEAD writers across *every*
+    rotation slot of ``base`` (and the base path itself); returns the
+    count removed.  The tmp name embeds the writer's pid, so a live
+    concurrent writer (rolling restart: old and new process both
+    snapshotting) keeps its in-flight tmp and its os.replace still lands.
+    Called after each rotated write AND at startup
+    (:func:`load_latest_session`) — a writer that crashed mid-write into a
+    slot no later writer touches would otherwise leak its tmp forever."""
+    d = os.path.dirname(os.path.abspath(base))
+    prefix = os.path.basename(base) + "."
+    swept = 0
+    try:
+        names = os.listdir(d)
+    except OSError:
+        return 0
+    for name in names:
+        if not (name.startswith(prefix) and ".tmp." in name):
+            continue
+        pid_s = name.rsplit(".tmp.", 1)[1].split(".", 1)[0]
+        if pid_s.isdigit() and _pid_alive(int(pid_s)):
+            continue
+        try:
+            os.unlink(os.path.join(d, name))
+            swept += 1
+        except OSError:
+            pass
+    return swept
+
+
+def save_session_rotated(state, base: str, keep: int = 3) -> str:
     """Write the next rotation slot ``base.<seq>`` atomically and prune
     slots beyond the newest ``keep`` — the continuous-durability sink of
     ``serve_studies --snapshot-every``.  Readers (:func:`load_latest_session`)
@@ -321,22 +382,7 @@ def save_session_rotated(state: SessionState, base: str,
             os.unlink(stale)
         except OSError:
             pass
-    # sweep orphaned tmps of DEAD snapshotters (best-effort) — the tmp
-    # name embeds the writer's pid, so a live concurrent writer (rolling
-    # restart: old and new process both snapshotting) keeps its in-flight
-    # tmp and its os.replace still lands
-    d = os.path.dirname(os.path.abspath(base))
-    prefix = os.path.basename(base) + "."
-    for name in os.listdir(d):
-        if not (name.startswith(prefix) and ".tmp." in name):
-            continue
-        pid_s = name.rsplit(".tmp.", 1)[1].split(".", 1)[0]
-        if pid_s.isdigit() and _pid_alive(int(pid_s)):
-            continue
-        try:
-            os.unlink(os.path.join(d, name))
-        except OSError:
-            pass
+    sweep_session_tmps(base)
     return path
 
 
@@ -347,6 +393,9 @@ def load_latest_session(base: str) -> Tuple[SessionState, str]:
     mid-publish, disk lost a tail) falls back to the previous slot —
     restore loses at most one snapshot interval.  Raises
     ``FileNotFoundError`` when no slot is readable."""
+    # startup sweep: reclaim tmps a crashed writer left in ANY slot —
+    # including slots the new process will never write again
+    sweep_session_tmps(base)
     failures = []
     for _, path in session_rotation(base):
         try:

@@ -108,6 +108,7 @@ class FaultInjector:
                  outage_rate: float = 0.0,
                  straggler_rate: float = 0.0,
                  straggler_factor: float = 4.0,
+                 admission_fault_rate: float = 0.0,
                  outage_ops: int = 3,
                  max_faults: Optional[int] = None):
         self.seed = seed
@@ -116,6 +117,7 @@ class FaultInjector:
         self.outage_rate = outage_rate
         self.straggler_rate = straggler_rate
         self.straggler_factor = straggler_factor
+        self.admission_fault_rate = admission_fault_rate
         self.outage_ops = outage_ops
         self.max_faults = max_faults
         self._rng = random.Random(seed)
@@ -162,6 +164,37 @@ class FaultInjector:
             self._record("outage", f"{op}:{key}")
             self._outage_left = max(0, self.outage_ops - 1)
             raise StoreOutageError(f"injected store outage at {op} {key}")
+
+    def on_admission(self, site: str) -> bool:
+        """One gateway admission decision is about to commit (front door).
+        True = the admission is *deferred*: the control plane lost the
+        request this round, the study stays queued (``queued_admission``)
+        and is retried at the next admission pump — a transient
+        control-plane fault, not lost work.  Drawn from the same seeded
+        stream as the data-plane sites, so a gateway run with admission
+        faults is exactly replayable."""
+        if self._draw(self.admission_fault_rate):
+            self._record("admission", site)
+            return True
+        return False
+
+    # ---------------------------------------------------- stream snapshot
+    def snapshot_state(self) -> Dict[str, Any]:
+        """Picklable mid-run state of the fault schedule (front-door
+        snapshots carry it so a restored gateway *continues* the schedule
+        instead of replaying it from the seed)."""
+        return {"rng": self._rng.getstate(), "outage_left": self._outage_left,
+                "injected": self.injected, "by_kind": dict(self.by_kind),
+                "retries_verified": self.retries_verified,
+                "log": list(self.log)}
+
+    def restore_state(self, state: Dict[str, Any]) -> None:
+        self._rng.setstate(state["rng"])
+        self._outage_left = state["outage_left"]
+        self.injected = state["injected"]
+        self.by_kind = dict(state["by_kind"])
+        self.retries_verified = state["retries_verified"]
+        self.log = list(state["log"])
 
     def straggle(self, seconds: Optional[float], site: str) -> Optional[float]:
         """Maybe stretch a stage's virtual duration (slow node, thermal

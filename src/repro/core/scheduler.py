@@ -232,6 +232,14 @@ class FairShareScheduler(CriticalPathScheduler):
     round (truncated tails, deferred chains, collapsed sibling groups)
     are refunded via ``on_stages_unassigned`` with the same split, so
     rescheduling never double-charges.
+
+    Tenant quotas (front door): :meth:`set_study_weights` assigns each
+    study a fair-share *weight* — ranking divides charged usage by it, so
+    a study with weight 2 is served as if it had paid half, i.e. receives
+    twice the share before the policy considers it "served".  The
+    :class:`~repro.frontdoor.gateway.StudyGateway` maps per-tenant quota
+    weights onto the study ids it admits.  The default weight is 1.0, so
+    sessions without a front door schedule exactly as before.
     """
 
     name = "fair_share"
@@ -239,7 +247,26 @@ class FairShareScheduler(CriticalPathScheduler):
     def __init__(self):
         super().__init__()
         self.usage: Dict[str, float] = {}   # study id -> charged GPU-seconds
+        self.weights: Dict[str, float] = {}  # study id -> fair-share weight
         self._plan_studies: Dict[str, frozenset] = {}
+
+    def set_study_weights(self, weights: Dict[str, float]) -> None:
+        """Assign fair-share weights (> 0) per study id; missing studies
+        keep weight 1.0.  Snapshot-safe: the policy object is captured
+        whole, so restored sessions keep their quota weights."""
+        if not hasattr(self, "weights"):   # unpickled from a v4 snapshot
+            self.weights = {}
+        for sid, w in weights.items():
+            if w <= 0:
+                raise ValueError(f"fair-share weight for {sid!r} must be "
+                                 f"> 0, got {w}")
+            self.weights[sid] = float(w)
+
+    def _weighted_usage(self, study: str) -> float:
+        # getattr: policy objects unpickled from pre-weight snapshots
+        # have no ``weights`` dict — they keep the default weight 1.0
+        weights = getattr(self, "weights", None) or {}
+        return self.usage.get(study, 0.0) / weights.get(study, 1.0)
 
     def _studies_of(self, plan: SearchPlan, stage: Stage) -> Set[str]:
         studies: Set[str] = set()
@@ -250,7 +277,7 @@ class FairShareScheduler(CriticalPathScheduler):
     def _head_priority(self, stage, remaining, fanout):
         studies = self._plan_studies.get(stage.stage_id, frozenset())
         if studies:
-            least = min(self.usage.get(s, 0.0) for s in studies)
+            least = min(self._weighted_usage(s) for s in studies)
         else:
             # no study attribution (submit() without study=): rank as the
             # most-served so unattributed work never starves real studies

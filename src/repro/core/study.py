@@ -54,7 +54,27 @@ from repro.core.trainer import TrainerBackend
 from repro.train.checkpoint import CheckpointStore
 
 __all__ = ["Study", "StudySpec", "StudyFuture", "StudyService",
-           "run_studies"]
+           "PlanKeyMismatch", "run_studies"]
+
+
+class PlanKeyMismatch(ValueError):
+    """A study was submitted to a session driving a different plan key.
+
+    Structured (it carries both keys) so a router — the front-door
+    :class:`~repro.frontdoor.gateway.StudyGateway` — can catch it and
+    re-route the submission to the right per-key session instead of
+    string-matching an error message.  Subclasses ``ValueError`` for
+    backward compatibility with callers that caught the old bare error.
+    """
+
+    def __init__(self, session_key: str, submitted_key: str):
+        self.session_key = session_key
+        self.submitted_key = submitted_key
+        super().__init__(
+            f"study key {submitted_key!r} differs from this session's "
+            f"{session_key!r} — one StudyService drives one stage forest "
+            "(same model/dataset/hp-set); start another service for a "
+            "different key")
 
 
 def _resolve_policy(policy: Union[str, SchedulingPolicy, None],
@@ -281,6 +301,17 @@ class StudyService:
     def quiescent(self) -> bool:
         return self._engine is None or self._engine.quiescent
 
+    @property
+    def engine(self) -> Optional[ExecutionEngine]:
+        """The live engine (None until the first submission) — the
+        front-door lease manager grows/shrinks its worker fleet."""
+        return self._engine
+
+    @property
+    def key(self) -> Optional[str]:
+        """The plan key this session drives (None until first submit)."""
+        return self._key
+
     # ------------------------------------------------------------- admission
     @staticmethod
     def _key_of(study: Union[StudySpec, Study, str]) -> str:
@@ -308,10 +339,7 @@ class StudyService:
                 worker_meshes=self.worker_meshes,
                 fault_injector=self.fault_injector)
         elif key != self._key:
-            raise ValueError(
-                f"study key {key!r} differs from this session's {self._key!r}"
-                " — one StudyService drives one stage forest (same model/"
-                "dataset/hp-set); start another service for a different key")
+            raise PlanKeyMismatch(self._key, key)
         return self._engine
 
     def submit(self, study: Union[StudySpec, Study, str], tuner: Tuner,
@@ -488,6 +516,12 @@ class StudyService:
     def _restore_state(cls, db: SearchPlanDB, state, backend: TrainerBackend,
                        store: Optional[CheckpointStore],
                        fault_injector) -> "StudyService":
+        from repro.core.engine.session import SessionState
+        if not isinstance(state, SessionState):
+            raise ValueError(
+                "snapshot holds a gateway envelope (multiple sessions) — "
+                "restore it with repro.frontdoor.StudyGateway.restore, not "
+                "StudyService.restore")
         eng = restore_engine(state, backend, store,
                              fault_injector=fault_injector)
         db.put(state.plan_key, state.plan)

@@ -1,36 +1,69 @@
-"""Launcher: drive a long-lived StudyService under staggered traffic.
+"""Launcher: drive the front-door study gateway under mixed traffic.
 
-The operational entry point for the service plane — a deployment's
-supervisor would run exactly this loop: keep one session open, admit
-studies as they arrive, snapshot periodically, and (after a crash or a
-rolling restart) resume from the newest snapshot instead of recomputing.
+The operational entry point for the deployment — a supervisor would run
+exactly this loop: keep one :class:`~repro.frontdoor.StudyGateway` open,
+admit studies from many tenants over many plan keys as they arrive, lease
+the worker fleet across the per-key sessions, snapshot periodically, and
+(after a crash or a rolling restart) resume from the newest snapshot
+instead of recomputing.
 
+Examples::
+
+    # one key, default tenant — the classic single-session service
     PYTHONPATH=src python -m repro.launch.serve_studies \\
         --studies 4 --arrival-gap 3600 --workers 40
-    PYTHONPATH=src python -m repro.launch.serve_studies \\
-        --studies 4 --snapshot-at 9000 --session /tmp/hippo-session.pkl
 
-``--snapshot-at T`` drives the session to virtual time ``T``, snapshots,
-then **kills the live session** and finishes from the snapshot via
-``StudyService.restore`` — proving the resume path end-to-end (the final
-stats are identical to an uninterrupted run).  Uses the simulator backend;
-swap ``SimulatedTrainer`` for ``JaxTrainer`` to serve real training.
+    # multi-tenant: weighted quotas, bounded queues, a concurrency cap
+    PYTHONPATH=src python -m repro.launch.serve_studies \\
+        --studies 8 --keys 2 --workers 12 --max-concurrent 4 \\
+        --tenant-quota alice:2.0 --tenant-quota bob:1.0:8:2
+
+    # kill/restore proof: snapshot mid-run, discard the live gateway,
+    # finish from disk — served totals match the uninterrupted run
+    PYTHONPATH=src python -m repro.launch.serve_studies \\
+        --studies 4 --snapshot-at 9000 --session /tmp/hippo-gw.snap
+
+``--snapshot-at T`` drives the deployment to global virtual time ``T``,
+snapshots the whole gateway envelope (every session + admission state +
+lease table), then **kills the live gateway** and finishes from the
+snapshot via ``StudyGateway.restore``.  Uses the simulator backend; swap
+``SimulatedTrainer`` for ``JaxTrainer`` to serve real training.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import signal
 import sys
 import time
 
-from repro.core import FaultInjector, SearchPlanDB, StudyService, StudySpec
+from repro.core import FaultInjector, SearchPlanDB, StudySpec
 from repro.core.engine import session_rotation
 from repro.core.trainer import SimulatedTrainer
 from repro.core.tuners import GridSearchSpace, GridTuner
 from repro.core.hpseq import Constant, Exponential, MultiStep, StepLR, Warmup
 from repro.dist.meshes import plan_worker_meshes
+from repro.frontdoor import StudyGateway, TenantQuota
 from repro.train.checkpoint import CheckpointStore, DirectoryObjectStore
+
+EXAMPLES = """\
+examples:
+  # one key, one tenant (the classic single-session service)
+  serve_studies --studies 4 --arrival-gap 3600 --workers 40
+
+  # two teams with weighted fair shares (alice gets 2x bob's share) and a
+  # bounded queue + running cap for bob; studies spread over 2 plan keys
+  serve_studies --studies 8 --keys 2 --workers 12 --max-concurrent 4 \\
+      --tenant-quota alice:2.0 --tenant-quota bob:1.0:8:2
+
+  # continuous durability: rotated gateway snapshots every 600 virtual
+  # seconds; on restart the deployment resumes from the newest slot
+  serve_studies --studies 6 --snapshot-every 600 --session /tmp/gw.snap
+
+  # prove the kill/restore path end-to-end
+  serve_studies --studies 4 --snapshot-at 9000 --session /tmp/gw.snap
+"""
 
 
 def _space(seed: int, steps: int) -> GridSearchSpace:
@@ -45,14 +78,38 @@ def _space(seed: int, steps: int) -> GridSearchSpace:
              "bs": [Constant(128), MultiStep(128, [70], values=[128, 256])]})
 
 
-def _submit_all(svc: StudyService, args) -> None:
-    spec = StudySpec(args.model, args.dataset, ("lr", "bs"))
+def _parse_quota(text: str):
+    """NAME:WEIGHT[:MAX_QUEUED[:MAX_RUNNING]] -> (name, TenantQuota)."""
+    parts = text.split(":")
+    if len(parts) < 2 or len(parts) > 4:
+        raise argparse.ArgumentTypeError(
+            f"bad --tenant-quota {text!r}: expected "
+            "NAME:WEIGHT[:MAX_QUEUED[:MAX_RUNNING]]")
+    name = parts[0]
+    try:
+        weight = float(parts[1])
+        max_queued = int(parts[2]) if len(parts) > 2 else 16
+        max_running = int(parts[3]) if len(parts) > 3 else None
+        return name, TenantQuota(weight=weight, max_queued=max_queued,
+                                 max_running=max_running)
+    except (ValueError, argparse.ArgumentTypeError) as exc:
+        raise argparse.ArgumentTypeError(
+            f"bad --tenant-quota {text!r}: {exc}")
+
+
+def _submit_all(gw: StudyGateway, args, tenants) -> None:
     for i in range(args.studies):
-        svc.submit(spec, GridTuner(_space(i, args.steps).trials(args.steps)),
-                   at=i * args.arrival_gap)
+        model = (args.model if args.keys == 1
+                 else f"{args.model}-v{i % args.keys}")
+        spec = StudySpec(model, args.dataset, ("lr", "bs"))
+        gw.submit(spec, GridTuner(_space(i, args.steps).trials(args.steps)),
+                  tenant=tenants[i % len(tenants)],
+                  at=i * args.arrival_gap)
 
 
-def _report(stats) -> None:
+def _report_session(stats, label: str = "") -> None:
+    if label:
+        print(f"session {label}:")
     print(f"served: {stats.gpu_hours:.1f} GPU-h, "
           f"e2e {stats.end_to_end / 3600:.2f} h, "
           f"{stats.steps_run} steps, {stats.rounds} scheduling rounds")
@@ -82,50 +139,92 @@ def _report(stats) -> None:
               f"{ss.instant_results:3d} instant")
 
 
-def _build_store(args):
-    """Tiered checkpoint plane from the CLI knobs (None = in-memory)."""
+def _report(gw: StudyGateway, archive) -> None:
+    multi = len(archive) > 1
+    for key, stats in archive:
+        _report_session(stats, label=key[:12] if multi else "")
+    ledger = gw.tenant_ledger()
+    if len(ledger) > 1 or set(ledger) != {"default"}:
+        for tenant in sorted(ledger):
+            e = ledger[tenant]
+            print(f"tenant {tenant}: {e['gpu_seconds'] / 3600:.1f} GPU-h "
+                  f"over {e['studies']:.0f} studies "
+                  f"({e['queued']:.0f} still queued at the door)")
+
+
+def _store_factory(args):
+    """Per-plan-key tiered checkpoint plane from the CLI knobs (None =
+    every session gets its own in-memory store)."""
     if not args.ckpt_dir:
         return None
-    remote = (DirectoryObjectStore(args.remote_dir) if args.remote_dir
-              else None)
-    cap = (int(args.disk_capacity_mb * 1e6)
-           if args.disk_capacity_mb else None)
-    return CheckpointStore(args.ckpt_dir, remote=remote,
-                           disk_capacity_bytes=cap)
+
+    def factory(key: str) -> CheckpointStore:
+        d = os.path.join(args.ckpt_dir, key[:16])
+        remote = (DirectoryObjectStore(os.path.join(args.remote_dir,
+                                                    key[:16]))
+                  if args.remote_dir else None)
+        cap = (int(args.disk_capacity_mb * 1e6)
+               if args.disk_capacity_mb else None)
+        return CheckpointStore(d, remote=remote, disk_capacity_bytes=cap)
+
+    return factory
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="long-lived study service under staggered arrivals "
-                    "(simulated backend)")
+        description="front-door study gateway under mixed multi-tenant "
+                    "traffic (simulated backend)",
+        epilog=EXAMPLES,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--studies", type=int, default=4)
     ap.add_argument("--steps", type=int, default=160)
-    ap.add_argument("--workers", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=40,
+                    help="worker slots in the gateway-owned fleet (leased "
+                         "across the per-key sessions)")
+    ap.add_argument("--keys", type=int, default=1,
+                    help="distinct plan keys to spread the studies over "
+                         "(model name is varied); each key gets its own "
+                         "session, fleet share follows demand")
     ap.add_argument("--arrival-gap", type=float, default=3600.0,
                     help="virtual seconds between study arrivals")
     ap.add_argument("--model", default="resnet20")
     ap.add_argument("--dataset", default="cifar10")
     ap.add_argument("--policy", default="fair_share")
     ap.add_argument("--sec-per-step", type=float, default=60.0)
+    ap.add_argument("--tenant-quota", action="append", default=[],
+                    metavar="NAME:WEIGHT[:MAX_QUEUED[:MAX_RUNNING]]",
+                    help="per-tenant admission quota (repeatable).  WEIGHT "
+                         "scales the tenant's fair share at the door and "
+                         "inside shared sessions; MAX_QUEUED bounds its "
+                         "admission queue (default 16); MAX_RUNNING caps "
+                         "its concurrently-running studies.  Studies are "
+                         "submitted round-robin across the named tenants.")
+    ap.add_argument("--max-concurrent", type=int, default=None,
+                    help="gateway-wide cap on concurrently-running studies; "
+                         "over-cap submissions wait at the door "
+                         "(queued_admission) and are admitted least-"
+                         "weighted-usage-first")
     ap.add_argument("--session", default=None,
-                    help="session snapshot path (required by --snapshot-at)")
+                    help="gateway snapshot path (required by --snapshot-at)")
     ap.add_argument("--snapshot-at", type=float, default=None,
-                    help="virtual time to snapshot at; the live session is "
-                         "then discarded and the run finishes via restore")
+                    help="global virtual time to snapshot at; the live "
+                         "gateway is then discarded and the run finishes "
+                         "via restore")
     ap.add_argument("--snapshot-every", type=float, default=None,
-                    help="continuous durability: rotate a session snapshot "
+                    help="continuous durability: rotate a gateway snapshot "
                          "to --session every T virtual seconds; on startup "
-                         "the service resumes from the newest readable "
+                         "the deployment resumes from the newest readable "
                          "rotation slot (a SIGKILL loses at most one "
                          "interval)")
     ap.add_argument("--snapshot-keep", type=int, default=3,
                     help="rotation slots kept by --snapshot-every")
     ap.add_argument("--inject-faults", type=int, default=None, metavar="SEED",
                     help="deterministic fault injection: worker crashes, "
-                         "transient stage failures and store outages drawn "
-                         "from this seed (same seed => same fault schedule)")
+                         "transient stage failures, store outages and "
+                         "admission deferrals drawn from this seed (same "
+                         "seed => same fault schedule)")
     ap.add_argument("--fault-rates", default="0.05,0.02,0.01",
-                    metavar="STAGE,CRASH,OUTAGE",
+                    metavar="STAGE,CRASH,OUTAGE[,ADMISSION]",
                     help="per-draw probabilities used by --inject-faults")
     ap.add_argument("--throttle", type=float, default=0.0,
                     help="wall seconds to sleep between engine steps "
@@ -133,8 +232,9 @@ def main() -> None:
                          "for exercising the signal handlers)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="directory for the checkpoint plane (enables "
-                         "delta-encoded durable checkpoints; default: "
-                         "in-memory store)")
+                         "delta-encoded durable checkpoints, one "
+                         "subdirectory per plan key; default: in-memory "
+                         "stores)")
     ap.add_argument("--remote-dir", default=None,
                     help="directory standing in for the remote object-store "
                          "tier (requires --ckpt-dir)")
@@ -142,8 +242,8 @@ def main() -> None:
                     help="local disk tier capacity; LRU blobs past it "
                          "demote to --remote-dir")
     ap.add_argument("--devices-per-worker", type=int, default=0,
-                    help="give every worker a mesh of this many devices "
-                         "(distribution plane v2; 0 = plain thread "
+                    help="give every worker slot a mesh of this many "
+                         "devices (distribution plane v2; 0 = plain thread "
                          "workers).  The simulator accounts the mesh "
                          "width; real backends shard over it.")
     ap.add_argument("--mesh-host", default="host0",
@@ -156,9 +256,16 @@ def main() -> None:
         # the capacity only drives demotion to the remote tier; without one
         # it would be silently ignored
         ap.error("--disk-capacity-mb requires --remote-dir")
-
     if args.snapshot_every is not None and not args.session:
         ap.error("--snapshot-every requires --session PATH")
+    if args.keys < 1:
+        ap.error("--keys must be >= 1")
+
+    try:
+        quotas = dict(_parse_quota(q) for q in args.tenant_quota)
+    except argparse.ArgumentTypeError as exc:
+        ap.error(str(exc))
+    tenants = sorted(quotas) or ["default"]
 
     def backend():
         return SimulatedTrainer(base_seconds_per_step=args.sec_per_step,
@@ -167,38 +274,45 @@ def main() -> None:
     def injector():
         if args.inject_faults is None:
             return None
-        stage, crash, outage = (float(x) for x
-                                in args.fault_rates.split(","))
+        rates = [float(x) for x in args.fault_rates.split(",")]
+        stage, crash, outage = rates[:3]
+        admission = rates[3] if len(rates) > 3 else 0.0
         return FaultInjector(args.inject_faults, stage_fault_rate=stage,
-                             crash_rate=crash, outage_rate=outage)
+                             crash_rate=crash, outage_rate=outage,
+                             admission_fault_rate=admission)
 
     meshes = (plan_worker_meshes(args.workers, args.devices_per_worker,
                                  host=args.mesh_host)
               if args.devices_per_worker > 0 else None)
     restored = False
     if args.session and session_rotation(args.session):
-        # a prior --snapshot-every run left rotated snapshots: resume from
-        # the newest readable slot instead of recomputing (the restored
-        # state carries the pending futures AND the snapshot cadence)
-        svc = StudyService.restore_latest(SearchPlanDB(), args.session,
-                                          backend(), store=_build_store(args),
-                                          fault_injector=injector())
+        # a prior --snapshot-every run left rotated snapshots: resume the
+        # whole deployment from the newest readable slot (the restored
+        # envelope carries every session, the admission queue, the lease
+        # table AND the snapshot cadence)
+        gw = StudyGateway.restore_latest(SearchPlanDB(), args.session,
+                                         backend(),
+                                         store_factory=_store_factory(args),
+                                         fault_injector=injector())
         restored = True
-        print(f"restored session at t={svc.time:.0f}s from newest "
-              f"rotation slot ({len(svc.futures)} studies attached)")
+        print(f"restored gateway at t={gw.time:.0f}s from newest rotation "
+              f"slot ({len(gw.sessions)} sessions, "
+              f"{len(gw.futures)} studies attached)")
     else:
-        db = SearchPlanDB()
-        svc = StudyService(db, backend(), n_workers=args.workers,
-                           policy=args.policy, store=_build_store(args),
-                           worker_meshes=meshes,
-                           fault_injector=injector())
-        _submit_all(svc, args)
+        gw = StudyGateway(SearchPlanDB(), backend(),
+                          n_slots=None if meshes else args.workers,
+                          slot_meshes=meshes, quotas=quotas,
+                          max_concurrent=args.max_concurrent,
+                          fault_injector=injector(),
+                          store_factory=_store_factory(args),
+                          policy=args.policy)
+        _submit_all(gw, args, tenants)
     if args.snapshot_every is not None:
-        svc.enable_auto_snapshot(args.session, args.snapshot_every,
-                                 keep=args.snapshot_keep)
+        gw.enable_auto_snapshot(args.session, args.snapshot_every,
+                                keep=args.snapshot_keep)
 
     # graceful shutdown: SIGTERM/SIGINT finish the current engine step,
-    # snapshot the session to --session, and exit cleanly — a supervisor's
+    # snapshot the gateway to --session, and exit cleanly — a supervisor's
     # rolling restart then resumes via the startup restore above
     shutdown = {"sig": None}
 
@@ -211,22 +325,22 @@ def main() -> None:
     if args.snapshot_at is not None and not restored:
         if not args.session:
             ap.error("--snapshot-at requires --session PATH")
-        svc.run_until(args.snapshot_at)
-        path = svc.snapshot(args.session)
-        done = sum(f.done() for f in svc.futures)
-        print(f"snapshot at t={svc.time:.0f}s -> {path} "
-              f"({done}/{len(svc.futures)} studies done); "
-              "discarding live session, resuming from disk")
-        del svc                       # the "crash"
-        # a fresh store over the same tiers: committed blobs (local or
+        gw.run_until(args.snapshot_at)
+        path = gw.snapshot(args.session)
+        done = sum(f.done() for f in gw.futures)
+        print(f"snapshot at t={gw.time:.0f}s -> {path} "
+              f"({done}/{len(gw.futures)} studies done); "
+              "discarding live gateway, resuming from disk")
+        del gw                        # the "crash"
+        # fresh stores over the same tiers: committed blobs (local or
         # demoted to remote) are re-indexed at init and picked up by the
         # restore's eager recompute-on-miss check
-        svc = StudyService.restore(SearchPlanDB(), args.session, backend(),
-                                   store=_build_store(args),
-                                   fault_injector=injector())
+        gw = StudyGateway.restore(SearchPlanDB(), args.session, backend(),
+                                  store_factory=_store_factory(args),
+                                  fault_injector=injector())
 
     try:
-        while svc.step():
+        while gw.step():
             if args.throttle:
                 time.sleep(args.throttle)
             if shutdown["sig"] is not None:
@@ -236,10 +350,10 @@ def main() -> None:
                     # newest slot — restore_latest only scans slots, so a
                     # plain base-path write would be ignored on restart
                     if args.snapshot_every is not None:
-                        path = svc.snapshot_rotated()
+                        path = gw.snapshot_rotated()
                     else:
-                        path = svc.snapshot(args.session)
-                    print(f"{name}: final snapshot at t={svc.time:.0f}s "
+                        path = gw.snapshot(args.session)
+                    print(f"{name}: final snapshot at t={gw.time:.0f}s "
                           f"-> {path}; exiting")
                 else:
                     print(f"{name}: no --session configured, exiting "
@@ -250,8 +364,8 @@ def main() -> None:
         # process's previous handlers back
         for s, h in prev_handlers.items():
             signal.signal(s, h)
-    stats = svc.close()
-    _report(stats)
+    archive = gw.close()
+    _report(gw, archive)
 
 
 if __name__ == "__main__":

@@ -448,8 +448,12 @@ def test_v2_and_v3_snapshots_migrate():
         delattr(state.stats, f)
     m = migrate_session(state)
     assert m.version >= 4
-    assert all(len(row) == 7 for row in m.workers)
+    # v5 rows: (wid, busy, idle, mesh, failures, quarantines, q_until,
+    # draining) — mesh, fault record and the front-door draining flag are
+    # all backfilled
+    assert all(len(row) == 8 for row in m.workers)
     assert m.workers[0][3] is None          # mesh backfilled
+    assert m.workers[0][7] is False         # draining backfilled
     assert m.stats.stage_retries == 0 and m.stats.wasted_gpu_seconds == 0.0
 
     eng = restore_engine(m, SimulatedTrainer(horizon=80))
@@ -460,7 +464,7 @@ def test_v2_and_v3_snapshots_migrate():
     state3.version = 3
     state3.workers = [w[:4] for w in state3.workers]
     m3 = migrate_session(state3)
-    assert all(len(row) == 7 for row in m3.workers)
+    assert all(len(row) == 8 for row in m3.workers)
 
     _, state1 = _small_session()
     state1.version = 1
@@ -595,10 +599,14 @@ def test_sigterm_graceful_shutdown_snapshot(tmp_path):
     assert "final snapshot" in out
     assert os.path.exists(sess)
 
-    svc = StudyService.restore(
+    # the launcher is gateway-driven now: the final snapshot is a v5
+    # gateway envelope holding every live session
+    from repro.frontdoor import StudyGateway
+    gw = StudyGateway.restore(
         SearchPlanDB(), sess,
         SimulatedTrainer(base_seconds_per_step=10.0, horizon=60))
-    got = svc.close()
+    gw.join()
+    [(_, got)] = gw.close()
 
     db = SearchPlanDB()
     ref_svc = StudyService(db, SimulatedTrainer(base_seconds_per_step=10.0,

@@ -98,6 +98,40 @@ def test_launch_serve_studies_snapshot_resume(monkeypatch, capsys, tmp_path):
     assert served and served[0] in resumed
 
 
+def test_launch_serve_studies_multi_tenant(monkeypatch, capsys, tmp_path):
+    """The multi-tenant flags end-to-end: two plan keys, weighted quotas
+    with a bounded queue, an admission cap, and the per-tenant ledger in
+    the report."""
+    _run_main(monkeypatch, serve_studies,
+              ["serve_studies", "--studies", "4", "--keys", "2",
+               "--workers", "4", "--steps", "60", "--arrival-gap", "600",
+               "--sec-per-step", "10", "--max-concurrent", "2",
+               "--tenant-quota", "alice:2.0",
+               "--tenant-quota", "bob:1.0:8:2"])
+    out = capsys.readouterr().out
+    assert out.count("session ") == 2          # one report per plan key
+    assert out.count("served:") == 2
+    assert "tenant alice:" in out and "tenant bob:" in out
+    assert "still queued at the door" in out
+
+
+def test_launch_serve_studies_help_has_examples(monkeypatch, capsys):
+    with pytest.raises(SystemExit) as ei:
+        _run_main(monkeypatch, serve_studies, ["serve_studies", "--help"])
+    assert ei.value.code == 0
+    out = capsys.readouterr().out
+    assert "examples:" in out
+    assert "--tenant-quota alice:2.0" in out
+    assert "--max-concurrent" in out
+
+
+def test_launch_serve_studies_rejects_bad_quota(monkeypatch, capsys):
+    with pytest.raises(SystemExit):
+        _run_main(monkeypatch, serve_studies,
+                  ["serve_studies", "--tenant-quota", "alice"])
+    assert "NAME:WEIGHT" in capsys.readouterr().err
+
+
 def test_dryrun_reduced_rejects_multipod(monkeypatch):
     with pytest.raises(SystemExit):
         _run_main(monkeypatch, dryrun,
